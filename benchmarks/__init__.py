@@ -1,0 +1,14 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fission.py              Table 2 / Fig 6   CPU-only device fission
+  profile_construction.py Fig 5             Algorithm-1 search trace
+  hybrid.py               Table 3 / Figs 7-8 CPU+GPU vs GPU-only
+  maxdev.py               Table 4           maxDev calibration
+  kb_derivation.py        Table 5 / Figs 9-10 KB-derived vs built profiles
+  load_fluctuation.py     Fig 11            adaptation to CPU load
+  roofline.py             (this work)       40-cell roofline + §Perf
+
+``python -m benchmarks.run`` executes all and prints a CSV summary.
+Scheduling-policy numbers come from the calibrated simulator (single-core
+container; see DESIGN.md §7); kernel-level numbers are real timed runs.
+"""

@@ -1,0 +1,121 @@
+"""Table 3 / Figs 7-8 — CPU+GPU versus GPU-only executions.
+
+For each paper benchmark x parameterisation class x (1 GPU, 2 GPUs):
+run Algorithm 1 (profile construction) on the calibrated hybrid testbed,
+then compare the tuned hybrid execution to the GPU-only baseline.
+Paper claims: hybrid speedup 1.11-2.07x (avg 1.72x) on 1 GPU and
+1.00-1.88x (avg 1.56x) on 2 GPUs; NBody stays GPU-only; the CPU share
+shrinks as GPUs are added.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from benchmarks.paper_suite import (BENCHMARKS, cost_model_for,
+                                    hybrid_testbed, workload_for)
+from repro.core import (AcceleratorPlatform, DeviceInfo, HostPlatform,
+                        KnowledgeBase, TunerParams, build_profile)
+from repro.core.distribution import Distribution
+from repro.core.knowledge_base import PlatformConfig, Profile
+from repro.core.simulator import SimulatedExecutor
+from repro.core.scheduler import Scheduler
+
+I7_TOPOLOGY = {"L1": 6, "L2": 6, "L3": 2, "NO_FISSION": 1}
+
+CLASSES = {
+    "filter_pipeline": [2048, 4096, 8192],
+    "fft": [128, 256, 512],
+    "nbody": [16384, 32768, 65536],
+    "saxpy": [10 ** 6, 10 ** 7, 10 ** 8],
+    "segmentation": [64, 512, 3840],
+}
+
+
+def make_scheduler(name: str, size: int, n_gpus: int):
+    host = HostPlatform(DeviceInfo("cpu", "cpu", compute_units=6),
+                        topology=I7_TOPOLOGY)
+    accel = AcceleratorPlatform(
+        [DeviceInfo(f"gpu{i}", "gpu", peak_flops=2.87e12)
+         for i in range(n_gpus)], max_overlap=4)
+    sim = SimulatedExecutor(hybrid_testbed(n_gpus), seed=1,
+                            cost=cost_model_for(name, size))
+    sched = Scheduler(host=host, accel=accel, executor=sim,
+                      kb=KnowledgeBase())
+    return sched, sim
+
+
+def tune_cell(name: str, size: int, n_gpus: int) -> Dict:
+    sct = BENCHMARKS[name][0](size)
+    workload = workload_for(name, size)
+    sched, sim = make_scheduler(name, size, n_gpus)
+    arrays = sim.synthesise_arrays(sct, workload)
+
+    def evaluate(cfg: PlatformConfig, dist: Distribution):
+        prof = Profile(sct_id=sct.unique_id(), workload=workload,
+                       share_a=dist.a, config=cfg, best_time=math.inf)
+        _, stats = sched._dispatch(sct, arrays, prof)
+        n_a = sum(1 for s in sched._slots(prof)
+                  if s.device_type != "cpu")
+        ta = max(stats.times[:n_a]) if n_a else 0.0
+        tb = max(stats.times[n_a:]) if len(stats.times) > n_a else 0.0
+        return stats.total, ta, tb
+
+    res = build_profile(sct.unique_id(), workload, host=sched.host,
+                        accel=sched.accel, evaluate=evaluate,
+                        params=TunerParams(number_executions=1,
+                                           precision=1e-4))
+    # GPU-only baseline: share_a = 1, best overlap from the same tuner cfg
+    base_prof = Profile(sct_id=sct.unique_id(), workload=workload,
+                        share_a=1.0,
+                        config=PlatformConfig(
+                            fission_level="NO_FISSION",
+                            overlap=res.profile.config.overlap))
+    _, base_stats = sched._dispatch(sct, arrays, base_prof)
+    return {"benchmark": name, "size": size, "gpus": n_gpus,
+            "hybrid_time": res.profile.best_time,
+            "gpu_only_time": base_stats.total,
+            "speedup": base_stats.total / max(res.profile.best_time, 1e-12),
+            "gpu_share": res.profile.share_a,
+            "fission": res.profile.config.fission_level,
+            "overlap": res.profile.config.overlap,
+            "evals": res.evaluations}
+
+
+def main(full: bool = False) -> List[str]:
+    lines: List[str] = []
+    print("== hybrid CPU+GPU vs GPU-only (Table 3 / Figs 7-8) ==")
+    print(f"{'benchmark':18s} {'size':>9s} {'gpus':>4s} {'speedup':>8s} "
+          f"{'gpu share':>9s} {'fission':>9s} {'overlap':>7s}")
+    shares = {1: [], 2: []}
+    speeds = {1: [], 2: []}
+    for name, sizes in CLASSES.items():
+        use = sizes if full else sizes[1:2]
+        for size in use:
+            for n_gpus in (1, 2):
+                r = tune_cell(name, size, n_gpus)
+                print(f"{name:18s} {size:>9d} {n_gpus:>4d} "
+                      f"{r['speedup']:>8.2f} {r['gpu_share']:>9.2f} "
+                      f"{r['fission']:>9s} {r['overlap']:>7d}")
+                lines.append(
+                    f"hybrid,{name},{size},{n_gpus},{r['speedup']:.3f},"
+                    f"{r['gpu_share']:.3f}")
+                shares[n_gpus].append(r["gpu_share"])
+                speeds[n_gpus].append(r["speedup"])
+    for g in (1, 2):
+        if speeds[g]:
+            avg = sum(speeds[g]) / len(speeds[g])
+            print(f"  avg hybrid speedup {g} GPU(s): {avg:.2f}x "
+                  f"(paper: {1.72 if g == 1 else 1.56:.2f}x)")
+            lines.append(f"hybrid_avg,{g}gpu,{avg:.3f}")
+    if shares[1] and shares[2]:
+        s1 = sum(shares[1]) / len(shares[1])
+        s2 = sum(shares[2]) / len(shares[2])
+        print(f"  avg CPU share: {1 - s1:.2f} (1 GPU) -> {1 - s2:.2f} "
+              f"(2 GPUs)  [paper: decreases]")
+        lines.append(f"hybrid_cpu_share,{1 - s1:.3f},{1 - s2:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    main(full=True)

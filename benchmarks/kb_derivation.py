@@ -1,0 +1,110 @@
+"""Table 5 / Figs 9-10 — KB configuration derivation vs profile
+construction.
+
+Protocol (paper Sec. 4.2.2): independently build a profile for each of 8
+image sizes (the baselines); then, starting from a KB holding only
+Image 0's profile, process Images 1..7 via *derivation only* — measuring
+the derived-distribution error, the performance error, the number of
+unbalanced executions (of 100) and load-balance operations.  Paper
+claims: distribution error < 3%, performance error < 5% after the first
+three images, balancer fires < 4 times per 100 in steady state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from benchmarks.hybrid import make_scheduler
+from benchmarks.paper_suite import BENCHMARKS, workload_for
+from repro.core import KnowledgeBase, LoadBalancer, TunerParams, \
+    build_profile
+from repro.core.distribution import Distribution
+from repro.core.knowledge_base import Origin, PlatformConfig, Profile
+from repro.core.load_balancer import class_times
+from repro.core.spec import Workload
+
+#: the paper's image sequence (Table 5)
+IMAGES = [1024, 4288, 512, 8192, 1800, 2048, 256, 1440]
+
+
+def _evaluator(sched, sct, workload, arrays):
+    def evaluate(cfg: PlatformConfig, dist: Distribution):
+        prof = Profile(sct_id=sct.unique_id(), workload=workload,
+                       share_a=dist.a, config=cfg, best_time=math.inf)
+        _, stats = sched._dispatch(sct, arrays, prof)
+        n_a = sum(1 for s in sched._slots(prof) if s.device_type != "cpu")
+        ta, tb = class_times(stats.times, n_a)
+        return stats.total, ta, tb
+    return evaluate
+
+
+def build_baseline(size: int) -> Profile:
+    sct = BENCHMARKS["filter_pipeline"][0](size)
+    workload = Workload((size, size))
+    sched, sim = make_scheduler("filter_pipeline", size, n_gpus=1)
+    arrays = sim.synthesise_arrays(sct, workload)
+    res = build_profile(sct.unique_id(), workload, host=sched.host,
+                        accel=sched.accel,
+                        evaluate=_evaluator(sched, sct, workload, arrays),
+                        params=TunerParams(number_executions=1))
+    return res.profile
+
+
+def main(full: bool = False) -> List[str]:
+    runs = 100 if full else 30
+    print("== KB derivation vs construction (Table 5 / Figs 9-10) ==")
+    baselines: Dict[int, Profile] = {}
+    sizes = IMAGES if full else IMAGES[:5]
+    for size in sizes:
+        baselines[size] = build_baseline(size)
+
+    kb = KnowledgeBase()
+    kb.store(baselines[sizes[0]])
+    lines: List[str] = []
+    print(f"{'image':>6s} {'built gpu%':>10s} {'derived gpu%':>12s} "
+          f"{'dist err%':>9s} {'perf err%':>9s} {'unbal':>6s} {'ops':>4s}")
+    for size in sizes[1:]:
+        sct = BENCHMARKS["filter_pipeline"][0](size)
+        workload = Workload((size, size))
+        sched, sim = make_scheduler("filter_pipeline", size, n_gpus=1)
+        sched.kb = kb
+        arrays = sim.synthesise_arrays(sct, workload)
+        derived = kb.derive(sct.unique_id(), workload)
+        base = baselines[size]
+        dist_err = abs(derived.share_a - base.share_a) * 100
+
+        # run 100 executions with balancing, as the paper does
+        balancer = LoadBalancer(max_dev=0.85)
+        cur = derived
+        unbalanced = ops = 0
+        best_time = math.inf
+        for _ in range(runs):
+            _, stats = sched._dispatch(sct, arrays, cur)
+            best_time = min(best_time, stats.total)
+            if balancer.is_unbalanced(stats.deviation):
+                unbalanced += 1
+            if balancer.observe(stats):
+                n_a = sum(1 for s in sched._slots(cur)
+                          if s.device_type != "cpu")
+                ta, tb = class_times(stats.times, n_a)
+                new = balancer.adjust(
+                    Distribution(a=cur.share_a, b=1 - cur.share_a), ta, tb)
+                cur = Profile(sct_id=cur.sct_id, workload=workload,
+                              share_a=new.a, config=cur.config,
+                              best_time=math.inf, origin=Origin.DERIVED)
+                ops += 1
+                balancer.lbt = 0.0
+        kb.store(Profile(sct_id=cur.sct_id, workload=workload,
+                         share_a=cur.share_a, config=cur.config,
+                         best_time=best_time, origin=Origin.DERIVED))
+        perf_err = (best_time - base.best_time) / base.best_time * 100
+        print(f"{size:>6d} {100 * base.share_a:>10.1f} "
+              f"{100 * derived.share_a:>12.1f} {dist_err:>9.2f} "
+              f"{perf_err:>9.2f} {unbalanced:>6d} {ops:>4d}")
+        lines.append(f"kb_derivation,{size},{dist_err:.2f},"
+                     f"{perf_err:.2f},{unbalanced},{ops}")
+    return lines
+
+
+if __name__ == "__main__":
+    main(full=True)

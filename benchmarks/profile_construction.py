@@ -1,0 +1,56 @@
+"""Fig 5 — execution times measured during profile construction.
+
+Reproduces the FFT-256MB trace: every (fission, overlap, distribution)
+configuration Algorithm 1 times on the hybrid testbed, in search order,
+showing the ordered-and-pruned walk towards the optimum.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from benchmarks.hybrid import make_scheduler
+from benchmarks.paper_suite import BENCHMARKS, workload_for
+from repro.core import TunerParams, build_profile
+from repro.core.distribution import Distribution
+from repro.core.knowledge_base import PlatformConfig, Profile
+
+
+def main(full: bool = False) -> List[str]:
+    name, size = "fft", 256
+    sct = BENCHMARKS[name][0](size)
+    workload = workload_for(name, size)
+    sched, sim = make_scheduler(name, size, n_gpus=1)
+    arrays = sim.synthesise_arrays(sct, workload)
+
+    def evaluate(cfg: PlatformConfig, dist: Distribution):
+        prof = Profile(sct_id=sct.unique_id(), workload=workload,
+                       share_a=dist.a, config=cfg, best_time=math.inf)
+        _, stats = sched._dispatch(sct, arrays, prof)
+        n_a = sum(1 for s in sched._slots(prof) if s.device_type != "cpu")
+        ta = max(stats.times[:n_a]) if n_a else 0.0
+        tb = max(stats.times[n_a:]) if len(stats.times) > n_a else 0.0
+        return stats.total, ta, tb
+
+    res = build_profile(sct.unique_id(), workload, host=sched.host,
+                        accel=sched.accel, evaluate=evaluate,
+                        params=TunerParams(number_executions=1))
+    print("== profile construction trace (Fig 5, FFT-256) ==")
+    print(f"{'#':>3s} {'fission':>9s} {'overlap':>7s} {'gpu%':>6s} "
+          f"{'time':>9s}")
+    step = max(1, len(res.trace) // (40 if not full else len(res.trace)))
+    for i, t in enumerate(res.trace):
+        if i % step == 0 or i == len(res.trace) - 1:
+            print(f"{i:>3d} {t.fission_level:>9s} {t.overlap:>7d} "
+                  f"{100 * t.distribution:>5.1f} {t.time:>9.4f}")
+    best = res.profile
+    print(f"best: fission={best.config.fission_level} "
+          f"overlap={best.config.overlap} gpu={best.share_a:.2f} "
+          f"t={best.best_time:.4f} ({res.evaluations} evaluations)")
+    return [f"profile_construction,fft,256,{res.evaluations},"
+            f"{best.best_time:.5f},{best.config.fission_level},"
+            f"{best.config.overlap}"]
+
+
+if __name__ == "__main__":
+    main(full=True)

@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``experiments/dryrun/<mesh>/*.json`` and renders, per (arch x
+shape) cell: the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS (remat/redundancy waste), and the roofline
+fraction (the §Perf score).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_cells(mesh: str = "single_pod_16x16",
+               tag: Optional[str] = None) -> List[Dict]:
+    pat = f"*--{tag}.json" if tag else "*.json"
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, pat))):
+        if tag is None and "--" in os.path.basename(p).replace(
+                ".json", "").split("--", 1)[1]:
+            # skip tagged (hillclimb) artifacts in the baseline table
+            base = os.path.basename(p)[:-5]
+            if base.count("--") > 1:
+                continue
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def render(mesh: str = "single_pod_16x16") -> List[str]:
+    cells = load_cells(mesh)
+    lines: List[str] = []
+    print(f"== roofline ({mesh}) ==")
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>9s} "
+           f"{'coll_s':>8s} {'bneck':>7s} {'useful':>7s} {'frac':>7s} "
+           f"{'mem/chip':>9s}")
+    print(hdr)
+    for d in cells:
+        if d.get("skipped"):
+            print(f"{d['arch']:22s} {d['shape']:12s} "
+                  f"SKIP ({d['skipped'][:60]}...)")
+            lines.append(f"roofline,{d['arch']},{d['shape']},skip")
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        print(f"{d['arch']:22s} {d['shape']:12s} {r['compute_s']:>10.4f} "
+              f"{r['memory_s']:>9.4f} {r['collective_s']:>8.4f} "
+              f"{r['bottleneck'][:7]:>7s} {r['useful_fraction']:>7.3f} "
+              f"{r['roofline_fraction']:>7.4f} "
+              f"{m['adjusted_peak_per_chip_bytes'] / 2**30:>8.2f}G")
+        lines.append(
+            f"roofline,{d['arch']},{d['shape']},{r['compute_s']:.5f},"
+            f"{r['memory_s']:.5f},{r['collective_s']:.5f},"
+            f"{r['bottleneck']},{r['roofline_fraction']:.5f}")
+    return lines
+
+
+def main(full: bool = False) -> List[str]:
+    lines = []
+    for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+        if os.path.isdir(os.path.join(DRYRUN_DIR, mesh)):
+            lines.extend(render(mesh))
+    if not lines:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

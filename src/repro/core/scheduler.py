@@ -1,0 +1,203 @@
+"""Top-level work-distribution decision process (paper Fig. 4 / Sec. 3.2).
+
+The Scheduler receives execution requests from the Library layer and:
+
+  1. on a **new (SCT, workload)** pair — derives a framework configuration
+     ("Derive work distribution"): exact KB hit, or scattered-data
+     interpolation over collected knowledge; the derived profile is
+     persisted (the derivation populates the KB, acting as a cache);
+  2. on a **recurrent** pair — checks whether the previous runs were
+     unbalanced (lbt detector); if so, either *builds* an SCT profile from
+     scratch (Algorithm 1 — only when explicitly enabled and none exists)
+     or *adjusts* the current distribution with the adaptive binary search;
+  3. dispatches: decomposes the data per the locality-aware plan into the
+     per-slot partitions and hands the task group to the executor
+     (work queues -> Task Launcher, paper Fig. 2).
+
+The executor is pluggable — :class:`repro.core.executor.ThreadedExecutor`
+(real partitioned runs on this host) and
+:class:`repro.core.simulator.SimulatedExecutor` share the interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.autotuner import TunerParams, build_profile
+from repro.core.decomposition import (ConcretePartitioning, DecompositionPlan,
+                                      ExecutionSlot, build_plan)
+from repro.core.distribution import Distribution
+from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
+                                       Profile)
+from repro.core.load_balancer import ExecutionStats, LoadBalancer, class_times
+from repro.core.platforms import AcceleratorPlatform, HostPlatform
+from repro.core.skeletons import SCT
+from repro.core.spec import Workload
+
+
+@dataclasses.dataclass
+class ScheduledRun:
+    """Outcome of one scheduled execution."""
+
+    outputs: Dict[str, Any]
+    stats: ExecutionStats
+    profile: Profile
+    action: str                  # "exact" | "derived" | "built" | "adjusted" | "reused"
+
+
+class Scheduler:
+    def __init__(self, *, host: HostPlatform, accel: AcceleratorPlatform,
+                 executor, kb: Optional[KnowledgeBase] = None,
+                 balancer: Optional[LoadBalancer] = None,
+                 allow_profile_build: bool = False,
+                 tuner_params: TunerParams = TunerParams(),
+                 default_share_a: float = 0.8):
+        self.host = host
+        self.accel = accel
+        self.executor = executor
+        self.kb = kb if kb is not None else KnowledgeBase()
+        self.balancer = balancer if balancer is not None else LoadBalancer()
+        self.allow_profile_build = allow_profile_build
+        self.tuner_params = tuner_params
+        self.default_share_a = default_share_a
+        self._last_key: Optional[Tuple[str, str]] = None
+        self._current: Optional[Profile] = None
+
+    # ------------------------------------------------------------------
+    def run(self, sct: SCT, arrays: Dict[str, Any],
+            workload: Optional[Workload] = None) -> ScheduledRun:
+        workload = workload or infer_workload(sct, arrays)
+        key = (sct.unique_id(), workload.key())
+
+        if key != self._last_key or self._current is None:
+            profile, action = self._derive(sct, workload)           # Fig. 4 left
+        else:
+            profile, action = self._recurrent(sct, workload)        # Fig. 4 right
+        self._last_key, self._current = key, profile
+
+        outputs, stats = self._dispatch(sct, arrays, profile)
+
+        # Monitor: update detector; persist best-known configurations.
+        trigger = self.balancer.observe(stats)
+        if not trigger:
+            self.balancer.balanced_again()
+        if stats.total < profile.best_time:
+            improved = dataclasses.replace(profile, best_time=stats.total)
+            self.kb.store(improved)
+            self._current = improved
+        return ScheduledRun(outputs=outputs, stats=stats,
+                            profile=self._current, action=action)
+
+    # ------------------------------------------------------------------
+    def _derive(self, sct: SCT, workload: Workload) -> Tuple[Profile, str]:
+        exact = self.kb.exact(sct.unique_id(), workload)
+        if exact is not None:
+            return exact, "exact"
+        derived = self.kb.derive(sct.unique_id(), workload)
+        if derived is not None:
+            self.kb.store(derived)
+            return derived, "derived"
+        # empty KB: assume-good default, to be refined online (paper: the KB
+        # is assumed sufficient; adjustments correct over-optimism)
+        p = Profile(sct_id=sct.unique_id(), workload=workload,
+                    share_a=self.default_share_a, config=PlatformConfig(),
+                    best_time=math.inf, origin=Origin.DERIVED)
+        self.kb.store(p)
+        return p, "derived"
+
+    def _recurrent(self, sct: SCT, workload: Workload) -> Tuple[Profile, str]:
+        assert self._current is not None
+        unbalanced = self.balancer.lbt >= self.balancer.trigger
+        if not unbalanced:
+            return self._current, "reused"
+        have_built = (self._current.origin is Origin.BUILT)
+        if self.allow_profile_build and not have_built:
+            result = build_profile(
+                sct.unique_id(), workload, host=self.host, accel=self.accel,
+                evaluate=self._make_evaluator(sct, workload),
+                params=self.tuner_params, kb=self.kb, sct=sct)
+            self.balancer.reset_search()
+            self.balancer.lbt = 0.0
+            return result.profile, "built"
+        # Adjust workload distribution (adaptive binary search)
+        last = self.executor.last_class_times()
+        cur = Distribution(a=self._current.share_a, b=1 - self._current.share_a)
+        new = self.balancer.adjust(cur, last[0], last[1])
+        adjusted = dataclasses.replace(self._current, share_a=new.a,
+                                       best_time=math.inf)
+        return adjusted, "adjusted"
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, sct: SCT, arrays: Dict[str, Any], profile: Profile
+                  ) -> Tuple[Dict[str, Any], ExecutionStats]:
+        plan = build_plan(sct, {k: getattr(v, "shape", ())
+                                for k, v in arrays.items()})
+        slots = self._slots(profile)
+        shares = self._per_slot_shares(profile, slots)
+        part = plan.partition(slots, shares)
+        outputs, times = self.executor.execute(sct, part, arrays, profile)
+        n_a = sum(1 for s in slots if s.device_type != "cpu")
+        ta, tb = class_times(times, n_a)
+        stats = ExecutionStats(times=list(times), share_a=profile.share_a)
+        return outputs, stats
+
+    def _slots(self, profile: Profile) -> List[ExecutionSlot]:
+        """Accelerator slots first (class a), then host fission slots."""
+        self.host.configure(profile.config.fission_level)
+        self.accel.configure(profile.config.overlap)
+        slots: List[ExecutionSlot] = []
+        for d in self.accel.devices:
+            for o in range(self.accel.overlap):
+                slots.append(ExecutionSlot(device=f"{d.name}/q{o}",
+                                           device_type=d.kind,
+                                           wgs=dict(profile.config.wgs)))
+        for i in range(self.host.parallelism):
+            slots.append(ExecutionSlot(device=f"{self.host.device.name}/f{i}",
+                                       device_type="cpu",
+                                       wgs=dict(profile.config.wgs)))
+        return slots
+
+    def _per_slot_shares(self, profile: Profile,
+                         slots: Sequence[ExecutionSlot]) -> List[float]:
+        n_a = sum(1 for s in slots if s.device_type != "cpu")
+        n_b = len(slots) - n_a
+        ratios_a = self.accel.calibrate()
+        dist = Distribution(a=profile.share_a if n_b else 1.0,
+                            b=(1 - profile.share_a) if n_b else 0.0)
+        shares: List[float] = []
+        if n_a:
+            per_dev = [dist.a * r for r in ratios_a]     # static intra-class
+            per_queue = []
+            for r in per_dev:
+                per_queue.extend([r / self.accel.overlap] * self.accel.overlap)
+            shares.extend(per_queue)
+        if n_b:
+            shares.extend([dist.b / n_b] * n_b)
+        # normalise tiny float drift
+        t = sum(shares)
+        return [s / t for s in shares]
+
+    def _make_evaluator(self, sct: SCT, workload: Workload):
+        """Evaluator closure for Algorithm 1 over the live executor."""
+        def evaluate(cfg: PlatformConfig, dist: Distribution):
+            p = Profile(sct_id=sct.unique_id(), workload=workload,
+                        share_a=dist.a, config=cfg, best_time=math.inf,
+                        origin=Origin.BUILT)
+            arrays = self.executor.synthesise_arrays(sct, workload)
+            _, stats = self._dispatch(sct, arrays, p)
+            slots = self._slots(p)
+            n_a = sum(1 for s in slots if s.device_type != "cpu")
+            ta, tb = class_times(stats.times, n_a)
+            return stats.total, ta, tb
+        return evaluate
+
+
+def infer_workload(sct: SCT, arrays: Dict[str, Any]) -> Workload:
+    """Workload characterisation from the request arguments (Sec. 3.2.1)."""
+    for a in sct.free_inputs():
+        v = arrays.get(a.name)
+        if v is not None and hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+            itemsize = getattr(getattr(v, "dtype", None), "itemsize", 4)
+            return Workload(tuple(int(d) for d in v.shape), itemsize)
+    raise ValueError("cannot characterise workload: no vector argument")

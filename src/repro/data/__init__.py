@@ -1,0 +1,5 @@
+"""Deterministic, shard-resumable synthetic data pipeline."""
+from repro.data.pipeline import (DataConfig, SyntheticLM, batch_at,
+                                 host_shard_batch)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,67 @@
+"""Pallas TPU grouped GEMM for MoE expert FFNs (MegaBlocks-style).
+
+Computes ``y[e] = x[e] @ w[e]`` for E experts over capacity-padded token
+buffers — one kernel launch instead of E small GEMMs, so the MXU stays
+fed even when experts are narrow (granite: d_ff=512 per expert).
+
+Grid: (E, nC, nF, nK) — contraction (d) innermost with an f32 VMEM
+accumulator, so arbitrarily large d streams through fixed VMEM:
+``block_c·block_d + block_d·block_f + block_c·block_f`` floats/step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, y_ref, acc_ref):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   block_c: int = 128, block_f: int = 512,
+                   block_d: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f)."""
+    E, C, d = x.shape
+    _, _, f = w.shape
+    bc, bf, bd = min(block_c, C), min(block_f, f), min(block_d, d)
+    nc, nf, nk = -(-C // bc), -(-f // bf), -(-d // bd)
+    cp, fp, dp = nc * bc - C, nf * bf - f, nk * bd - d
+    if cp or dp:
+        x = jnp.pad(x, ((0, 0), (0, cp), (0, dp)))
+    if dp or fp:
+        w = jnp.pad(w, ((0, 0), (0, dp), (0, fp)))
+
+    y = pl.pallas_call(
+        _gemm_kernel,
+        grid=(E, nc, nf, nk),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, ik: (e, ic, ik)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, ik: (e, ik, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda e, ic, jf, ik: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, nc * bc, nf * bf), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return y[:, :C, :f]

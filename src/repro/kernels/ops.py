@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True`` —
+the kernel body runs in Python with real block indexing, which validates
+BlockSpecs, grids, and scratch semantics; on TPU the same calls compile
+to Mosaic.  ``use_pallas('auto')`` picks per-backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.filter_pipeline import filter_pipeline as _filter
+from repro.kernels.moe_gemm import grouped_matmul as _gmm
+from repro.kernels.nbody import nbody_accelerations as _nbody
+from repro.kernels.nbody import nbody_step as _nbody_step
+from repro.kernels.saxpy import saxpy as _saxpy
+from repro.kernels.segmentation import segmentation as _seg
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, **kw):
+    """(B,H,S,hd) x (B,KV,S,hd) flash attention (GQA/causal/SWA/softcap)."""
+    return _flash(q, k, v, interpret=_interpret(), **kw)
+
+
+def flash_attention_bshd(q, k, v, **kw):
+    """Model-layout adapter: (B,S,H,hd)/(B,S,KV,hd) in and out."""
+    o = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+               v.transpose(0, 2, 1, 3), interpret=_interpret(), **kw)
+    return o.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, B, C, A, *, chunk: int, h0=None):
+    return _ssd(x, dt, B, C, A, chunk=chunk, h0=h0,
+                interpret=_interpret())
+
+
+def grouped_matmul(x, w, **kw):
+    return _gmm(x, w, interpret=_interpret(), **kw)
+
+
+def saxpy(a, x, y, **kw):
+    return _saxpy(jnp.asarray(a, x.dtype), x, y,
+                  interpret=_interpret(), **kw)
+
+
+def filter_pipeline(img, seed: int = 0, **kw):
+    return _filter(img, seed, interpret=_interpret(), **kw)
+
+
+def segmentation(vol, **kw):
+    return _seg(vol, interpret=_interpret(), **kw)
+
+
+def nbody_accelerations(pos, mass, **kw):
+    return _nbody(pos, mass, interpret=_interpret(), **kw)
+
+
+def nbody_step(pos, vel, mass, dt: float = 0.01):
+    return _nbody_step(pos, vel, mass, dt, interpret=_interpret())

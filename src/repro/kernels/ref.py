@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Each function mirrors its kernel's contract exactly; tests sweep shapes
+and dtypes asserting ``assert_allclose(kernel(interpret=True), ref)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  logit_cap: float = 0.0, scale: Optional[float] = None,
+                  kv_len: Optional[int] = None) -> jax.Array:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd).  Dense softmax reference."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * sc
+    if logit_cap and logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = kp < (Sk if kv_len is None else kv_len)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                 A: jax.Array, *, chunk: int,
+                 h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (per-token recurrence) oracle of the chunked kernel."""
+    Bsz, S, dih = x.shape
+    nh = dt.shape[-1]
+    hd = dih // nh
+    ds = B.shape[-1]
+    xf = x.astype(jnp.float32).reshape(Bsz, S, nh, hd)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    h = (jnp.zeros((Bsz, nh, ds, hd), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                        # (B,nh,hd),(B,nh),(B,ds)
+        a = jnp.exp(dtt * A[None, :])                # (B, nh)
+        upd = jnp.einsum("bs,bh,bhe->bhse", Bt, dtt, xt)
+        h = h * a[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhse->bhe", Ct, h)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h, (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+                  Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, S, dih)
+    return y.astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paper benchmark kernels
+# ---------------------------------------------------------------------------
+
+def saxpy_ref(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return a * x + y
+
+
+def filter_pipeline_ref(img: jax.Array, seed: int = 0, *,
+                        noise_scale: float = 8.0,
+                        solarize_threshold: float = 128.0) -> jax.Array:
+    """Mirrors the kernel's hash-based noise exactly (same LCG)."""
+    H, W = img.shape
+    row = jnp.arange(H, dtype=jnp.int32)[:, None] * jnp.ones(
+        (1, W), jnp.int32)
+    col = jnp.arange(W, dtype=jnp.int32)[None, :] * jnp.ones(
+        (H, 1), jnp.int32)
+
+    def hash01(salt):
+        h = (row * -1640531535 + col * 40503 + seed * 69069
+             + salt * 1013904223)
+        h ^= h >> 13
+        h = h * 1274126177
+        h ^= h >> 16
+        return (h & 0xFFFF).astype(jnp.float32) / 65535.0
+
+    noise = (hash01(1) + hash01(2) - 1.0) * noise_scale
+    v = jnp.clip(img + noise, 0.0, 255.0)
+    v = jnp.where(v > solarize_threshold, 255.0 - v, v)
+    return v[:, ::-1].astype(img.dtype)
+
+
+def segmentation_ref(vol: jax.Array, *, lo: float = 85.0,
+                     hi: float = 170.0) -> jax.Array:
+    return jnp.where(vol < lo, 0.0,
+                     jnp.where(vol > hi, 255.0, 128.0)).astype(vol.dtype)
+
+
+def nbody_ref(pos: jax.Array, mass: jax.Array,
+              softening: float = 1e-3) -> jax.Array:
+    d = pos[None, :, :] - pos[:, None, :]            # (N, N, 3)
+    r2 = (d * d).sum(-1) + softening
+    inv_r3 = jax.lax.rsqrt(r2) / r2
+    return jnp.einsum("ij,ijk->ik", mass[None, :] * inv_r3, d)

@@ -1,0 +1,39 @@
+"""Pallas saxpy — the paper's Map benchmark (BLAS single-precision
+a*x + y).  Embarrassingly parallel, epu=1; the VPU analogue of the
+paper's per-thread work is the (8, 128)-lane block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024          # 8 sublanes x 128 lanes
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def saxpy(a: jax.Array, x: jax.Array, y: jax.Array, *,
+          block: int = 1 << 16, interpret: bool = False) -> jax.Array:
+    """a scalar, x/y (N,) -> a*x + y."""
+    n = x.shape[0]
+    b = min(block, max(n, LANES))
+    nb = -(-n // b)
+    pad = nb * b - n
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    out = pl.pallas_call(
+        _saxpy_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * b,), x.dtype),
+        interpret=interpret,
+    )(a.reshape(1), x, y)
+    return out[:n]

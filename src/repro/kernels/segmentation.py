@@ -1,0 +1,35 @@
+"""Pallas Segmentation — the paper's 3-D Map benchmark.
+
+Gray-scale volume -> {black, gray, white} by two thresholds.  The
+elementary partitioning unit is one (D1 x D2) plane (paper Sec. 4:
+"partitioning can be performed only over the last [dimension]"), so the
+block is a whole plane and the grid walks dim 2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_kernel(vol_ref, o_ref, *, lo: float, hi: float):
+    v = vol_ref[...]
+    out = jnp.where(v < lo, 0.0, jnp.where(v > hi, 255.0, 128.0))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def segmentation(vol: jax.Array, *, lo: float = 85.0, hi: float = 170.0,
+                 interpret: bool = False) -> jax.Array:
+    """vol (D1, D2, D3) f32 -> segmented volume (plane-partitioned)."""
+    D1, D2, D3 = vol.shape
+    kernel = functools.partial(_seg_kernel, lo=lo, hi=hi)
+    return pl.pallas_call(
+        kernel,
+        grid=(D3,),
+        in_specs=[pl.BlockSpec((D1, D2, 1), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((D1, D2, 1), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((D1, D2, D3), vol.dtype),
+        interpret=interpret,
+    )(vol)

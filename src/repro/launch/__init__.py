@@ -1,0 +1,13 @@
+"""Launch layer: production meshes, dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets ``XLA_FLAGS`` at import time (512
+placeholder devices) and must only be imported as a program entry point —
+it is deliberately NOT re-exported here.
+"""
+from repro.launch.cells import CellConfig, cell_runtime, size_class
+from repro.launch.mesh import (dp_axes, make_host_mesh, make_production_mesh,
+                               mesh_chips)
+from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                   roofline)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution configuration is coherent without
+real hardware: for the single-pod (16, 16) mesh and the 2-pod
+(2, 16, 16) mesh, every cell's step function must
+``.lower().compile()`` under the production shardings, its
+``memory_analysis()`` must fit the 16 GiB/chip HBM budget, and its HLO is
+analysed (loop-aware) into the three roofline terms.
+
+Artifacts: one JSON per cell under ``experiments/dryrun/<mesh>/``,
+consumed by EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --mesh single --arch gemma2-2b \
+        --shape train_4k
+    python -m repro.launch.dryrun --mesh both            # all cells
+    python -m repro.launch.dryrun --mesh single --set microbatches=8
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.moe import moe_mesh
+
+from repro.configs import (SHAPES, applicable, arch_names, get_config,
+                           input_specs)
+from repro.configs.shapes import ShapeSpec
+from repro.launch.cells import CellConfig, cell_runtime
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import dp_axes, make_production_mesh, mesh_chips
+from repro.launch.roofline import roofline
+from repro.models import (ModelConfig, default_rules, model_defs,
+                          sharding_tree, shape_tree)
+from repro.models.lm import cache_defs, cache_dtype, decode_step, prefill
+from repro.models.sharding import Rules, sharding_for
+from repro.optim import AdamW, AdamWConfig
+from repro.runtime import RuntimeConfig, TrainState, make_train_step
+from repro.optim.adamw import OptState
+
+HBM_PER_CHIP = 16 * 1024 ** 3          # v5e
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: (step fn, arg structs, arg shardings, donate)
+# ---------------------------------------------------------------------------
+
+def _batch_sharding(mesh: Mesh, rules: Rules, struct: jax.ShapeDtypeStruct,
+                    leading: str = "batch") -> NamedSharding:
+    logical = (leading,) + (None,) * (len(struct.shape) - 1)
+    return sharding_for(struct.shape, logical, mesh, rules)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               cell: CellConfig):
+    """Returns (fn, args, in_shardings, donate_argnums, out_shardings)."""
+    rules = default_rules(mesh, fsdp=cell.fsdp, seq_shard=cell.seq_shard)
+    defs = model_defs(cfg)
+    params_struct = shape_tree(defs)                       # bf16
+    params_shard = sharding_tree(defs, mesh, rules)
+    data = input_specs(cfg, shape)
+    data_shard = {k: _batch_sharding(mesh, rules, v)
+                  for k, v in data.items() if v.shape}
+    rep = NamedSharding(mesh, P())
+
+    dp = dp_axes(mesh)
+    # (batch, seq, embed): batch over dp; optionally seq over model (SP)
+    act_spec = (P(dp, "model") if cell.act_seq_shard else P(dp))
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if shape.kind == "train":
+        # clamp microbatches so each microbatch's batch dim still tiles
+        # the dp axes (B/M % n_dp == 0); otherwise GSPMD replicates the
+        # whole residual stream
+        mb = max(1, min(cell.microbatches, shape.global_batch // n_dp))
+        while shape.global_batch % mb or (shape.global_batch // mb) % n_dp:
+            mb -= 1
+        cell = cell.replace(microbatches=mb)
+        rt = RuntimeConfig(microbatches=cell.microbatches, remat=cell.remat,
+                           remat_group=cell.remat_group,
+                           remat_inner=cell.remat_inner,
+                           loss_chunks=cell.loss_chunks, data_axes=dp,
+                           act_spec=act_spec)
+        opt = AdamW(AdamWConfig())
+        step = make_train_step(cfg, opt, rt)
+        f32 = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+        state = TrainState(
+            params=params_struct,
+            opt=OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                         m=f32(params_struct), v=f32(params_struct)),
+            compression=None)
+        state_shard = TrainState(
+            params=params_shard,
+            opt=OptState(step=rep, m=params_shard, v=params_shard),
+            compression=None)
+        batch = dict(data)
+        batch_shard = {k: data_shard.get(k, rep) for k in batch}
+        args = (state, batch)
+        in_shardings = (state_shard, batch_shard)
+        out_shardings = (state_shard, None)
+        donate = (0,) if cell.donate else ()
+        return step, args, in_shardings, donate, out_shardings
+
+    if shape.kind == "prefill":
+        extra_names = [k for k in data if k != "tokens"]
+
+        def prefill_fn(params, tokens, *extra):
+            kw = dict(zip(extra_names, extra))
+            return prefill(params, cfg, tokens, capacity=shape.seq_len,
+                           act_spec=act_spec, **kw)
+
+        args = (params_struct, data["tokens"]) + tuple(
+            data[k] for k in extra_names)
+        in_shardings = (params_shard, data_shard["tokens"]) + tuple(
+            data_shard.get(k, rep) for k in extra_names)
+        pdefs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+        out_shardings = (None, sharding_tree(pdefs, mesh, rules))
+        return prefill_fn, args, in_shardings, (), out_shardings
+
+    # decode
+    cdefs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+    kv_dtype = (jnp.float8_e4m3fn if cell.cache_dtype == "f8"
+                else jnp.bfloat16)
+
+    def _cdtype(key):
+        if key.startswith(("k", "v", "xk", "xv")):
+            return kv_dtype
+        return cache_dtype(key)
+
+    cache_struct = {k: jax.ShapeDtypeStruct(d.shape, _cdtype(k))
+                    for k, d in cdefs.items()}
+    cache_shard = sharding_tree(cdefs, mesh, rules)
+
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos)
+
+    args = (params_struct, cache_struct, data["token"], data["pos"])
+    in_shardings = (params_shard, cache_shard,
+                    data_shard.get("token", rep), rep)
+    out_shardings = (None, cache_shard)
+    donate = (1,) if cell.donate else ()
+    return serve_step, args, in_shardings, donate, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# One cell: lower, compile, analyse
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             overrides: Optional[Dict] = None,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = cell_runtime(cfg, shape, overrides)
+    chips = mesh_chips(mesh)
+    t0 = time.time()
+    fn, args, in_shardings, donate, out_shardings = build_cell(
+        cfg, shape, mesh, cell)
+    jitted = jax.jit(fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings,
+                     donate_argnums=donate)
+    moe_ctx = (moe_mesh(mesh, dp_axes(mesh), "model") if cfg.moe
+               else contextlib.nullcontext())
+    from repro.models.attention import attention_sp
+    sp_ctx = (attention_sp("model") if cell.act_seq_shard
+              else contextlib.nullcontext())
+    with mesh, moe_ctx, sp_ctx:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    ana = analyze(hlo)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    rf = roofline(per_chip_flops=ana.flops,
+                  per_chip_hbm_bytes=ana.hbm_bytes,
+                  per_chip_collective_bytes=ana.total_collective_bytes,
+                  chips=chips,
+                  active_params=cfg.active_param_count(),
+                  tokens=tokens, kind=shape.kind)
+
+    peak_bytes = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                  + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    # the CPU dry-run backend has no native bf16: float-normalisation
+    # materialises f32 copies of large bf16 buffers (absent on the TPU
+    # target).  ``adjusted`` subtracts them (a lower bound — the converts
+    # are not all simultaneously live), clamped at the argument+output
+    # floor; the TPU-target peak lies in [adjusted, raw].
+    floor = (mem.argument_size_in_bytes - mem.alias_size_in_bytes
+             + mem.output_size_in_bytes)
+    adjusted = max(peak_bytes - ana.legalization_bytes, floor)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "cell": dataclasses_dict(cell),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_chip_bytes": peak_bytes,
+            "cpu_legalization_bytes": ana.legalization_bytes,
+            "adjusted_peak_per_chip_bytes": adjusted,
+            "fits_16GiB": bool(adjusted < HBM_PER_CHIP),
+        },
+        "cost_analysis": {k: cost.get(k) for k in ("flops", "bytes accessed")
+                          if k in cost},
+        "hlo_analysis": ana.to_json(),
+        "roofline": rf.to_json(),
+    }
+    if keep_hlo:
+        record["hlo_text"] = hlo
+    return record
+
+
+def dataclasses_dict(cell: CellConfig) -> Dict:
+    import dataclasses as dc
+    return dc.asdict(cell)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def parse_overrides(pairs) -> Dict:
+    out: Dict[str, Any] = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False", "true", "false"):
+            out[k] = v.lower() == "true"
+        elif v in ("None", "null"):
+            out[k] = None
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    help="cell override knob=value (repeatable)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells with existing artifacts")
+    ap.add_argument("--tag", default=None,
+                    help="artifact suffix for hillclimb variants")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.overrides)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else arch_names()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = []
+    for mesh_name, mesh in meshes:
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                ok, reason = applicable(cfg, SHAPES[shape_name])
+                tag = f"--{args.tag}" if args.tag else ""
+                path = os.path.join(outdir, f"{arch}--{shape_name}{tag}.json")
+                if not ok:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name, "skipped": reason}, f,
+                                  indent=1)
+                    print(f"[skip] {mesh_name} {arch} {shape_name}: {reason}")
+                    continue
+                if os.path.exists(path) and not args.force:
+                    print(f"[have] {mesh_name} {arch} {shape_name}")
+                    continue
+                print(f"[cell] {mesh_name} {arch} {shape_name} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name,
+                                   overrides)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"       compile={rec['compile_s']:.1f}s "
+                          f"mem/chip={rec['memory']['peak_per_chip_bytes']/2**30:.2f}GiB "
+                          f"bottleneck={r['bottleneck']} "
+                          f"roofline_frac={r['roofline_fraction']:.3f}",
+                          flush=True)
+                except Exception as e:      # a failing cell is a bug; record
+                    failures.append((mesh_name, arch, shape_name, repr(e)))
+                    with open(path + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"[FAIL] {mesh_name} {arch} {shape_name}: {e!r}",
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f4 in failures:
+            print("  ", *f4)
+        return 1
+    print("\nall requested cells green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Production meshes (pure functions — importing never touches jax device
+state; the dry-run sets XLA_FLAGS *before* any jax initialisation).
+
+Topology (TPU v5e numbers; DESIGN.md §2):
+  single-pod: (data=16, model=16)            = 256 chips
+  multi-pod:  (pod=2, data=16, model=16)     = 512 chips
+
+``pod`` is the slowest axis (DCN between pods), ``model`` the fastest
+(ICI ring within hosts) — the axis order mirrors the physical hierarchy
+so GSPMD's collective scheduling maps pod-crossing traffic onto the
+data-parallel gradient reduction only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    n = 1
+    for s in shape:
+        n *= s
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=list(devices)[:n])
+
+
+def make_host_mesh(axes: Tuple[str, ...] = ("data",)) -> Mesh:
+    """Whatever this host actually has (smoke tests, examples)."""
+    n = len(jax.devices())
+    shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

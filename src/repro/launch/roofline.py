@@ -1,0 +1,84 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e targets).
+
+    compute    = FLOPs_per_chip / peak_FLOP/s
+    memory     = HBM_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+The analyzer (:mod:`repro.launch.hlo_analysis`) walks the *per-partition*
+HLO module, so all quantities are already per-chip; the assignment's
+``X_global / (chips × bw)`` formulation is identical.
+
+Hardware constants (assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+#: MODEL_FLOPS multiplier per step kind: train = fwd+bwd (6ND),
+#: prefill/decode = fwd only (2ND); N = active params, D = tokens.
+KIND_FACTOR = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float           # global useful FLOPs (6·N·D or 2·N·D)
+    hlo_flops: float             # global compiled FLOPs (per_chip × chips)
+    chips: int
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline (no-overlap lower bound = max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time (the score):
+        useful FLOPs / (chips × peak × step_time)."""
+        denom = self.chips * PEAK_FLOPS * self.step_time_s
+        return self.model_flops / denom if denom else 0.0
+
+    def to_json(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def roofline(*, per_chip_flops: float, per_chip_hbm_bytes: float,
+             per_chip_collective_bytes: float, chips: int,
+             active_params: float, tokens: float, kind: str) -> Roofline:
+    model_flops = KIND_FACTOR[kind] * active_params * tokens
+    return Roofline(
+        compute_s=per_chip_flops / PEAK_FLOPS,
+        memory_s=per_chip_hbm_bytes / HBM_BW,
+        collective_s=per_chip_collective_bytes / LINK_BW,
+        model_flops=model_flops,
+        hlo_flops=per_chip_flops * chips,
+        chips=chips,
+    )

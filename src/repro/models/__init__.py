@@ -1,0 +1,9 @@
+"""Architecture substrate: pure-JAX models expressed as Marrow SCTs."""
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.layers import (init_tree, logical_tree, shape_tree,
+                                 sharding_tree)
+from repro.models.lm import (cache_defs, decode_step, forward_backbone,
+                             forward_train, init_cache, model_defs, prefill)
+from repro.models.sharding import Rules, constrain, default_rules, spec_for
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,257 @@
+"""GQA attention: blockwise (flash-style) training/prefill + cached decode.
+
+Variants required by the assigned architectures:
+  * grouped-query attention (all archs; kv heads <= q heads),
+  * sliding-window attention (mixtral, gemma2 local layers),
+  * logit soft-capping (gemma2),
+  * non-causal self attention (whisper encoder) and cross attention
+    (whisper decoder).
+
+The training/prefill path is a **blockwise online-softmax** evaluation
+(double ``lax.scan`` over query/key blocks) so the S x S score matrix is
+never materialised — mandatory for the 32k prefill shapes.  It is the
+pure-jnp oracle of the Pallas ``flash_attention`` kernel
+(:mod:`repro.kernels.flash_attention`); on TPU the kernel is swapped in by
+``use_pallas=True`` (runtime flag), with identical semantics.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Defs, ParamDef, apply_rope, softcap
+
+NEG_INF = -2.0 ** 30
+
+#: sequence-parallel attention context: when set to a mesh axis name, the
+#: q-block axis is computed *in parallel* (vmap instead of scan) and
+#: pinned to that axis — the SP path for architectures whose head count
+#: does not divide the model axis (minicpm 36H, gemma2 8H, whisper 20H,
+#: granite 24H).  See EXPERIMENTS.md §Perf.
+import contextlib
+import contextvars
+
+_SP_AXIS: contextvars.ContextVar = contextvars.ContextVar(
+    "attention_sp", default=None)
+
+
+@contextlib.contextmanager
+def attention_sp(axis: str = "model"):
+    tok = _SP_AXIS.set(axis)
+    try:
+        yield
+    finally:
+        _SP_AXIS.reset(tok)
+
+
+def _sp_constrain(x, axis, dim: int):
+    """Pin tensor dim ``dim`` to mesh axis ``axis`` (no-op off-mesh)."""
+    if axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[dim] = axis
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def attn_defs(cfg: ModelConfig, *, cross: bool = False) -> Defs:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs: Defs = {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", "head_dim"), 0.0)
+        defs["bo"] = ParamDef((d,), ("embed",), 0.0)
+    return defs
+
+
+def qkv(x: jax.Array, p: Defs, cfg: ModelConfig,
+        positions: Optional[jax.Array] = None,
+        kv_x: Optional[jax.Array] = None,
+        rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to (B,S,H,hd) / (B,Skv,KV,hd); optionally rope."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(o: jax.Array, p: Defs) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Blockwise online-softmax attention (flash oracle)
+# ---------------------------------------------------------------------------
+
+def _mask_block(qi: jax.Array, kj: jax.Array, *, causal: bool,
+                window: Optional[int], kv_len: jax.Array | int,
+                window_flag: Optional[jax.Array] = None) -> jax.Array:
+    """(bq, bk) additive mask for query positions qi x key positions kj.
+
+    ``window_flag``: traced bool scalar enabling the (static-width) window
+    — lets a scanned layer stack alternate local/global attention (gemma2)
+    without unrolling.
+    """
+    m = kj[None, :] < kv_len
+    if causal:
+        m &= kj[None, :] <= qi[:, None]
+    if window is not None:
+        w = kj[None, :] > qi[:, None] - window
+        if window_flag is not None:
+            w = w | jnp.logical_not(window_flag)
+        m &= w
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        window_flag: Optional[jax.Array] = None,
+                        logit_cap: float = 0.0,
+                        scale: Optional[float] = None,
+                        q_offset: int = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        q_block: int = 512, k_block: int = 1024) -> jax.Array:
+    """Flash-style attention. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd).
+
+    ``q_offset``: global position of q[0] (prefill continuation / decode).
+    ``kv_len``: number of valid key positions (defaults to Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq, nk = -(-Sq // q_block), -(-Sk // k_block)
+    kvl = jnp.asarray(Sk if kv_len is None else kv_len)
+
+    qpad = nq * q_block - Sq
+    kpad = nk * k_block - Sk
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0))) if qpad else q
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0))) if kpad else k
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0))) if kpad else v
+    # (B, nq, bq, KV, G, hd) blocks
+    qb = qf.reshape(B, nq, q_block, KV, G, hd)
+    kb = kf.reshape(B, nk, k_block, KV, hd)
+    vb = vf.reshape(B, nk, k_block, KV, hd)
+
+    def q_body(qcur, iq):
+        qi = q_offset + iq * q_block + jnp.arange(q_block)
+
+        @functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, ik):
+            # flash-attention backward: recompute the (bq, bk) score tile
+            # instead of saving it — without this, the backward pass of a
+            # layer holds the full S^2 probability matrix in f32.
+            acc, m, l = carry
+            kj = ik * k_block + jnp.arange(k_block)
+            s = jnp.einsum("bqkgh,bjkh->bkgqj", qcur, kb[:, ik],
+                           preferred_element_type=jnp.float32) * sc
+            s = softcap(s, logit_cap)
+            s = s + _mask_block(qi, kj, causal=causal, window=window,
+                                kv_len=kvl, window_flag=window_flag)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqj,bjkh->bkgqh", p,
+                            vb[:, ik].astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        o = acc / jnp.maximum(l[..., None], 1e-30)        # (B,KV,G,bq,hd)
+        return o.transpose(0, 3, 1, 2, 4)                 # (B,bq,KV,G,hd)
+
+    sp_axis = _SP_AXIS.get()
+    if sp_axis is not None and nq > 1:
+        # sequence-parallel path: all q blocks in flight, block axis
+        # pinned to the mesh axis — each shard computes its (Sq/n x Sk)
+        # slice of the attention map (vmap is spatially parallel; the
+        # scan path below is sequential and therefore unshardable)
+        qb = _sp_constrain(qb, sp_axis, dim=1)
+        ob = jax.vmap(q_body, in_axes=(1, 0), out_axes=0)(
+            qb, jnp.arange(nq))                           # (nq,B,bq,KV,G,hd)
+        ob = _sp_constrain(ob, sp_axis, dim=0)
+    else:
+        def q_step(_, iq):
+            return None, q_body(qb[:, iq], iq)
+
+        _, ob = jax.lax.scan(q_step, None, jnp.arange(nq))
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_block, H, hd)
+    return o[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode attention (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     pos: jax.Array, window: Optional[int] = None,
+                     logit_cap: float = 0.0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q: (B,1,H,hd); caches: (B,Scap,KV,hd); ``pos``: current position.
+
+    For rolling (windowed) caches the caller guarantees Scap == window and
+    positions are stored modulo the window; masking here is by validity
+    count only.
+    """
+    B, _, H, hd = q.shape
+    Scap, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bjkh->bkgj", qg, k_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * sc
+    s = softcap(s, logit_cap)
+    j = jnp.arange(Scap)
+    valid = j[None, :] <= pos
+    if window is not None and Scap > window:
+        valid &= j[None, :] > pos - window
+    s = jnp.where(valid[None, None, :, :].reshape(1, 1, 1, Scap), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkh->bkgh", p,
+                   v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(k_cache: jax.Array, v_cache: jax.Array, k: jax.Array,
+                 v: jax.Array, pos: jax.Array,
+                 window: Optional[int] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Write one (B,1,KV,hd) k/v at ``pos`` (modulo window for rolling)."""
+    Scap = k_cache.shape[1]
+    idx = pos % Scap if (window is not None and Scap == window) else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), idx, axis=1)
+    return k_cache, v_cache

@@ -1,0 +1,192 @@
+"""Substrate layers: parameter definitions, norms, MLPs, rotary embeddings.
+
+Parameters are plain nested dicts of arrays.  Every module publishes a
+*parameter definition* tree (``ParamDef`` leaves: shape + logical axis
+names + init scale), from which three parallel pytrees derive:
+
+  * real parameters (smoke tests, examples)         — :func:`init_tree`
+  * ``ShapeDtypeStruct`` stand-ins (dry-run lowering) — :func:`shape_tree`
+  * ``NamedSharding``s via the logical rules          — :func:`sharding_tree`
+
+This is what keeps the SCT edges sharding-stable: every kernel touching a
+tensor derives its sharding from the same logical names (paper Sec. 3.1's
+global-vision partitioning, GSPMD rendition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import Rules, sharding_for
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    scale: float = 1.0          # stddev multiplier (0 => zeros, -1 => ones)
+
+    def stacked(self, n: int) -> "ParamDef":
+        return ParamDef((n,) + self.shape, (None,) + self.logical, self.scale)
+
+
+Defs = Dict[str, Any]            # nested dict of ParamDef
+
+
+def stack_defs(defs: Defs, n: int) -> Defs:
+    return jax.tree.map(lambda d: d.stacked(n), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_tree(rng: jax.Array, defs: Defs, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.scale == 0.0:
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.scale == -1.0:
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(defs: Defs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def sharding_tree(defs: Defs, mesh, rules: Rules):
+    return jax.tree.map(
+        lambda d: sharding_for(d.shape, d.logical, mesh, rules), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical_tree(defs: Defs):
+    return jax.tree.map(lambda d: d.logical, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(d: int) -> Defs:
+    return {"scale": ParamDef((d,), (None,), -1.0)}
+
+
+def rmsnorm(x: jax.Array, p: Defs, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated silu/gelu or squared-ReLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None,
+             mlp_axis: str = "mlp") -> Defs:
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    defs: Defs = {"w_in": ParamDef((d, f), ("embed", mlp_axis)),
+                  "w_out": ParamDef((f, d), (mlp_axis, "embed"))}
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((d, f), ("embed", mlp_axis))
+    return defs
+
+
+def activate(h: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(h)
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    if kind == "relu2":                       # nemotron squared-ReLU
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp(x: jax.Array, p: Defs, cfg: ModelConfig) -> jax.Array:
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = activate(h, cfg.activation) * (x @ p["w_gate"])
+    else:
+        h = activate(h, cfg.activation)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping; no-op when cap == 0."""
+    if cap and cap > 0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> Defs:
+    V = cfg.padded_vocab
+    defs: Defs = {"tokens": ParamDef((V, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, V), ("embed", "vocab"))
+    return defs
+
+
+def embed(tokens: jax.Array, p: Defs, cfg: ModelConfig) -> jax.Array:
+    e = jnp.take(p["tokens"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        e = e * jnp.asarray(math.sqrt(cfg.d_model), e.dtype)   # gemma scaling
+    return e
+
+
+def unembed(x: jax.Array, p: Defs, cfg: ModelConfig) -> jax.Array:
+    w = p["tokens"].T if cfg.tie_embeddings else p["unembed"]
+    logits = softcap(x @ w.astype(x.dtype), cfg.final_softcap)
+    return mask_padded_vocab(logits, cfg)
+
+
+def mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """-inf the padded tail ids so loss/sampling never see them."""
+    V, Vp = cfg.vocab, cfg.padded_vocab
+    if Vp == V:
+        return logits
+    ids = jnp.arange(Vp)
+    neg = jnp.asarray(-2.0 ** 30, logits.dtype)
+    return jnp.where(ids < V, logits, neg)

@@ -1,0 +1,677 @@
+"""Model assembly: decoder LMs (dense/MoE/SSM/hybrid/VLM) + encoder-decoder.
+
+Every architecture is the same Marrow SCT shape —
+``Pipeline(Embed, Loop(Block x L), Norm, LMHead)`` — rendered in JAX as a
+``lax.scan`` over stacked per-layer parameters, so the lowered HLO is
+depth-independent (one block body) and compiles quickly even for the
+104B-parameter configurations.
+
+Three entry points per architecture (built by :mod:`repro.runtime`):
+
+  * ``forward_train``  — full-sequence logits (+ MoE aux loss),
+  * ``prefill``        — fills the decode cache, returns last-token logits,
+  * ``decode_step``    — one token in, one token out, cache updated.
+
+Heterogeneous layer stacks scan over *groups*:
+  gemma2   — pairs (local SWA layer, global layer),
+  zamba2   — groups of (hybrid_attn_every-1) Mamba2 layers + 1 attention,
+  whisper  — separate encoder and decoder scans (cross-attention blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attn_defs, blockwise_attention,
+                                    decode_attention, out_proj, qkv,
+                                    update_cache)
+from repro.models.config import ModelConfig
+from repro.models.layers import (Defs, ParamDef, embed, embed_defs, mlp,
+                                 mlp_defs, rmsnorm, rmsnorm_def, stack_defs,
+                                 unembed)
+from repro.models.moe import moe_defs, moe_ffn
+
+Cache = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_block_defs(cfg: ModelConfig, *, cross: bool = False) -> Defs:
+    d: Defs = {"ln1": rmsnorm_def(cfg.d_model),
+               "attn": attn_defs(cfg),
+               "ln2": rmsnorm_def(cfg.d_model)}
+    if cfg.moe is not None:
+        d["moe"] = moe_defs(cfg)
+    else:
+        d["ffn"] = mlp_defs(cfg)
+    if cross:
+        d["ln_x"] = rmsnorm_def(cfg.d_model)
+        d["xattn"] = attn_defs(cfg)
+    return d
+
+
+def mamba_block_defs(cfg: ModelConfig) -> Defs:
+    return {"ln1": rmsnorm_def(cfg.d_model), "ssm": ssm_mod.ssm_defs(cfg)}
+
+
+def model_defs(cfg: ModelConfig) -> Defs:
+    defs: Defs = {"embed": embed_defs(cfg),
+                  "final_norm": rmsnorm_def(cfg.d_model)}
+    if not cfg.use_rope:
+        defs["pos_embed"] = ParamDef((max(cfg.max_pos, 1), cfg.d_model),
+                                     (None, "embed"), 0.02)
+    if cfg.enc_dec:
+        defs["encoder"] = {
+            "layers": stack_defs(attn_block_defs(cfg), cfg.n_enc_layers),
+            "final_norm": rmsnorm_def(cfg.d_model)}
+        defs["layers"] = stack_defs(attn_block_defs(cfg, cross=True),
+                                    cfg.n_layers)
+        return defs
+    if cfg.family == "ssm":
+        defs["layers"] = stack_defs(mamba_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        g, m = _hybrid_groups(cfg)
+        defs["layers"] = {
+            "mamba": stack_defs(stack_defs(mamba_block_defs(cfg), m), g),
+            "attn": stack_defs(attn_block_defs(cfg), g)}
+    elif cfg.local_global_pattern:
+        pairs = cfg.n_layers // 2
+        defs["layers"] = {"local": stack_defs(attn_block_defs(cfg), pairs),
+                          "global": stack_defs(attn_block_defs(cfg), pairs)}
+    else:
+        defs["layers"] = stack_defs(attn_block_defs(cfg), cfg.n_layers)
+    return defs
+
+
+def _hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    period = max(cfg.hybrid_attn_every, 1)
+    if cfg.n_layers % period:
+        raise ValueError(f"{cfg.arch}: n_layers {cfg.n_layers} not a "
+                         f"multiple of hybrid period {period}")
+    return cfg.n_layers // period, period - 1
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train / prefill path)
+# ---------------------------------------------------------------------------
+
+def _attn_part(p: Defs, x: jax.Array, cfg: ModelConfig, *,
+               positions: jax.Array, causal: bool,
+               window: Optional[int] = None,
+               window_flag: Optional[jax.Array] = None,
+               enc_out: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = qkv(h, p["attn"], cfg, positions=positions,
+                  rope=cfg.use_rope)
+    o = blockwise_attention(q, k, v, causal=causal, window=window,
+                            window_flag=window_flag,
+                            logit_cap=cfg.attn_softcap,
+                            scale=cfg.attn_scale)
+    y = x + out_proj(o, p["attn"])
+    if enc_out is not None:                       # cross attention
+        hx = rmsnorm(y, p["ln_x"], cfg.norm_eps)
+        qx, kx, vx = qkv(hx, p["xattn"], cfg, positions=None, kv_x=enc_out,
+                         rope=False)
+        ox = blockwise_attention(qx, kx, vx, causal=False,
+                                 logit_cap=cfg.attn_softcap,
+                                 scale=cfg.attn_scale)
+        y = y + out_proj(ox, p["xattn"])
+    return y, (k, v)
+
+
+def _ffn_part(p: Defs, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_ffn(h, p["moe"], cfg)
+    else:
+        y, aux = mlp(h, p["ffn"], cfg), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def attn_block(p: Defs, x: jax.Array, cfg: ModelConfig, *,
+               positions: jax.Array, causal: bool = True,
+               window: Optional[int] = None,
+               window_flag: Optional[jax.Array] = None,
+               enc_out: Optional[jax.Array] = None):
+    y, kv = _attn_part(p, x, cfg, positions=positions, causal=causal,
+                       window=window, window_flag=window_flag,
+                       enc_out=enc_out)
+    y, aux = _ffn_part(p, y, cfg)
+    return y, aux, kv
+
+
+def mamba_block(p: Defs, x: jax.Array, cfg: ModelConfig, *,
+                h0=None, conv0=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    y, h_fin, conv = ssm_mod.ssd_prefill(h, p["ssm"], cfg, h0=h0,
+                                         conv_state=conv0)
+    return x + y, h_fin, conv
+
+
+# ---------------------------------------------------------------------------
+# Forward (training): tokens -> logits (+aux)
+# ---------------------------------------------------------------------------
+
+def _embed_input(params: Defs, cfg: ModelConfig, tokens: jax.Array,
+                 extras: Dict[str, jax.Array],
+                 pos0: int = 0) -> jax.Array:
+    x = embed(tokens, params["embed"], cfg)
+    if cfg.frontend_positions and "frontend_embeds" in extras:
+        # VLM/audio frontend stub: precomputed patch/frame embeddings
+        # replace the first P positions of the sequence.
+        fe = extras["frontend_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, fe, (0, 0, 0))
+    if not cfg.use_rope:
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos0, S, 0)
+        x = x + pe.astype(x.dtype)
+    return x
+
+
+def _run_encoder(params: Defs, cfg: ModelConfig, frames: jax.Array,
+                 remat_policy=None, act_spec=None) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    B, F, _ = frames.shape
+    pos = _sinusoids(F, cfg.d_model, frames.dtype)
+    x = _constrain(frames + pos[None], act_spec)
+    positions = jnp.arange(F)[None]
+
+    def body(h, lp):
+        y, _, _ = attn_block(lp, h, cfg, positions=positions, causal=False)
+        return y, None
+
+    x, _ = jax.lax.scan(
+        _maybe_remat(_wrap_body(body, act_spec, carry_tuple=False),
+                     remat_policy), x, params["encoder"]["layers"])
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _sinusoids(length: int, channels: int, dtype) -> jax.Array:
+    t = jnp.arange(length, dtype=jnp.float32)[:, None]
+    half = channels // 2
+    inv = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                  / max(half - 1, 1))
+    ang = t * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _maybe_remat(body, policy):
+    """Wrap a scan body in jax.checkpoint (activation rematerialisation)."""
+    if policy is None:
+        return body
+    return jax.checkpoint(body, policy=policy)
+
+
+def _constrain(x, spec):
+    """with_sharding_constraint that is a no-op off-mesh (CPU tests)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def _group_layers(tree, g: int):
+    """Reshape every stacked-leaf (L, ...) -> (L//g, g, ...)."""
+    def one(leaf):
+        L = leaf.shape[0]
+        if L % g:
+            raise ValueError(f"remat_group {g} does not divide layer "
+                             f"stack {L}")
+        return leaf.reshape((L // g, g) + leaf.shape[1:])
+    return jax.tree.map(one, tree)
+
+
+def _grouped_body(body, g: int, policy=None):
+    """Nested checkpointing, scan-of-scan: the outer (checkpointed) body
+    advances g layers, so the *persistent* saved stack shrinks g-fold
+    (L/g carries instead of L).  The inner per-layer body is checkpointed
+    too, so one group's backward recompute holds g transient carries plus
+    a single layer's intermediates — never g full layers."""
+    if g <= 1:
+        return body
+    inner = body if policy is None else jax.checkpoint(body, policy=policy)
+
+    def body_g(carry, lp_g):
+        out, _ = jax.lax.scan(inner, carry, lp_g)
+        return out, None
+    return body_g
+
+
+def _wrap_body(body, act_spec, carry_tuple: bool = True):
+    """Pin the scanned carry's activation sharding at every layer —
+    without this, GSPMD happily propagates FSDP weight shardings into the
+    residual stream (batch replicated, embed sharded: 16x the memory and
+    an all-gather per layer)."""
+    if act_spec is None:
+        return body
+
+    if carry_tuple:
+        def wrapped(carry, lp):
+            h, aux = carry
+            return body((_constrain(h, act_spec), aux), lp)
+    else:
+        def wrapped(h, lp):
+            return body(_constrain(h, act_spec), lp)
+    return wrapped
+
+
+def forward_backbone(params: Defs, cfg: ModelConfig, tokens: jax.Array,
+                     remat_policy=None, act_spec=None, remat_group: int = 1,
+                     remat_inner_policy=None,
+                     **extras) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S) -> final hidden states (B,S,d), aux-loss scalar.
+
+    ``remat_policy``: jax.checkpoint policy applied to each scanned layer
+    body (None = let XLA save what it wants).
+    """
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None]
+    x = _constrain(_embed_input(params, cfg, tokens, extras), act_spec)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.enc_dec:
+        enc = _run_encoder(params, cfg, extras["frames"], remat_policy,
+                           act_spec)
+
+        def body(carry, lp):
+            h, aux = carry
+            y, a, _ = attn_block(lp, h, cfg, positions=positions,
+                                 causal=True, enc_out=enc)
+            return (y, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(_grouped_body(_wrap_body(body, act_spec),
+                                       remat_group,
+                                       remat_inner_policy or remat_policy),
+                         remat_policy),
+            (x, aux_total), _group_layers(params["layers"], remat_group)
+            if remat_group > 1 else params["layers"])
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            h, aux = carry
+            y, _, _ = mamba_block(lp, h, cfg)
+            return (y, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(_grouped_body(_wrap_body(body, act_spec),
+                                       remat_group,
+                                       remat_inner_policy or remat_policy),
+                         remat_policy),
+            (x, aux_total), _group_layers(params["layers"], remat_group)
+            if remat_group > 1 else params["layers"])
+    elif cfg.family == "hybrid":
+        def body(carry, lp):
+            h, aux = carry
+
+            def mbody(hh, mp):
+                y, _, _ = mamba_block(mp, hh, cfg)
+                return y, None
+
+            h, _ = jax.lax.scan(mbody, h, lp["mamba"])
+            h, a, _ = attn_block(lp["attn"], h, cfg, positions=positions,
+                                 causal=True, window=cfg.sliding_window)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(_grouped_body(_wrap_body(body, act_spec),
+                                       remat_group,
+                                       remat_inner_policy or remat_policy),
+                         remat_policy),
+            (x, aux_total), _group_layers(params["layers"], remat_group)
+            if remat_group > 1 else params["layers"])
+    elif cfg.local_global_pattern:
+        def body(carry, lp):
+            h, aux = carry
+            h, a1, _ = attn_block(lp["local"], h, cfg, positions=positions,
+                                  window=cfg.sliding_window)
+            h, a2, _ = attn_block(lp["global"], h, cfg, positions=positions)
+            return (h, aux + a1 + a2), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(_grouped_body(_wrap_body(body, act_spec),
+                                       remat_group,
+                                       remat_inner_policy or remat_policy),
+                         remat_policy),
+            (x, aux_total), _group_layers(params["layers"], remat_group)
+            if remat_group > 1 else params["layers"])
+    else:
+        def body(carry, lp):
+            h, aux = carry
+            y, a, _ = attn_block(lp, h, cfg, positions=positions,
+                                 window=cfg.sliding_window)
+            return (y, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(_grouped_body(_wrap_body(body, act_spec),
+                                       remat_group,
+                                       remat_inner_policy or remat_policy),
+                         remat_policy),
+            (x, aux_total), _group_layers(params["layers"], remat_group)
+            if remat_group > 1 else params["layers"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def forward_train(params: Defs, cfg: ModelConfig, tokens: jax.Array,
+                  remat_policy=None, **extras
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S) -> logits (B,S,V), aux-loss scalar."""
+    x, aux_total = forward_backbone(params, cfg, tokens,
+                                    remat_policy=remat_policy, **extras)
+    return unembed(x, params["embed"], cfg), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, capacity: int) -> Defs:
+    """ParamDef tree of the decode cache (shapes + logical axes)."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    kv_log = (None, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+
+    def kv_def(n_layers: int, cap: int) -> ParamDef:
+        return ParamDef((n_layers, batch, cap, KV, hd), kv_log, 0.0)
+
+    if cfg.family == "ssm":
+        return _ssm_cache_defs(cfg, cfg.n_layers, batch, lead=())
+    if cfg.family == "hybrid":
+        g, m = _hybrid_groups(cfg)
+        d = _ssm_cache_defs(cfg, m, batch, lead=(g,))
+        cap = min(capacity, cfg.sliding_window) if cfg.sliding_window \
+            else capacity
+        d["k"] = kv_def(g, cap)
+        d["v"] = kv_def(g, cap)
+        return d
+    if cfg.local_global_pattern:
+        pairs = cfg.n_layers // 2
+        w = min(cfg.sliding_window, capacity)
+        return {"k_local": kv_def(pairs, w), "v_local": kv_def(pairs, w),
+                "k_global": kv_def(pairs, capacity),
+                "v_global": kv_def(pairs, capacity)}
+    cap = min(capacity, cfg.sliding_window) if cfg.sliding_window \
+        else capacity
+    d = {"k": kv_def(cfg.n_layers, cap), "v": kv_def(cfg.n_layers, cap)}
+    if cfg.enc_dec:
+        d["xk"] = kv_def(cfg.n_layers, cfg.enc_frames)
+        d["xv"] = kv_def(cfg.n_layers, cfg.enc_frames)
+    return d
+
+
+def _ssm_cache_defs(cfg: ModelConfig, n_layers: int, batch: int,
+                    lead: Tuple[int, ...]) -> Defs:
+    s = cfg.ssm
+    nh, ds, hd = s.n_heads(cfg.d_model), s.d_state, s.head_dim
+    di, K1 = s.d_inner(cfg.d_model), s.conv_dim - 1
+    nl = (None,) * len(lead)
+    return {
+        "h": ParamDef(lead + (n_layers, batch, nh, ds, hd),
+                      nl + (None, "cache_batch", "heads", None, None), 0.0),
+        "conv_x": ParamDef(lead + (n_layers, batch, K1, di),
+                           nl + (None, "cache_batch", None, "mlp"), 0.0),
+        "conv_B": ParamDef(lead + (n_layers, batch, K1, ds),
+                           nl + (None, "cache_batch", None, None), 0.0),
+        "conv_C": ParamDef(lead + (n_layers, batch, K1, ds),
+                           nl + (None, "cache_batch", None, None), 0.0),
+    }
+
+
+def cache_dtype(key: str, dtype=jnp.bfloat16):
+    return jnp.float32 if key == "h" else dtype     # SSM state is f32
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=jnp.bfloat16) -> Cache:
+    defs = cache_defs(cfg, batch, capacity)
+    return {k: jnp.zeros(d.shape, cache_dtype(k, dtype))
+            for k, d in defs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: tokens -> (last logits, filled cache)
+# ---------------------------------------------------------------------------
+
+def _fit_window(k: jax.Array, S: int, W: int) -> jax.Array:
+    """Pack the last W of S prefilled k/v (B,S,KV,hd) into a rolling cache."""
+    if S >= W:
+        return jnp.roll(k[:, S - W:], S % W, axis=1)
+    return jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+
+
+def prefill(params: Defs, cfg: ModelConfig, tokens: jax.Array,
+            capacity: Optional[int] = None, act_spec=None, **extras
+            ) -> Tuple[jax.Array, Cache]:
+    B, S = tokens.shape
+    cap = capacity or S
+    positions = jnp.arange(S)[None]
+    x = _constrain(_embed_input(params, cfg, tokens, extras), act_spec)
+
+    def pad_cap(k: jax.Array, c: int) -> jax.Array:
+        return (k if k.shape[1] == c
+                else jnp.pad(k, ((0, 0), (0, c - k.shape[1]),
+                                 (0, 0), (0, 0))))
+
+    if cfg.enc_dec:
+        enc = _run_encoder(params, cfg, extras["frames"],
+                           act_spec=act_spec)
+
+        def body(h, lp):
+            y, _, (k, v) = attn_block(lp, h, cfg, positions=positions,
+                                      causal=True, enc_out=enc)
+            # cross k/v are position-independent: precompute once per layer
+            hx = rmsnorm(y, lp["ln_x"], cfg.norm_eps)
+            _, xk, xv = qkv(hx, lp["xattn"], cfg, positions=None,
+                            kv_x=enc, rope=False)
+            return y, {"k": pad_cap(k.astype(jnp.bfloat16), cap),
+                       "v": pad_cap(v.astype(jnp.bfloat16), cap),
+                       "xk": xk.astype(jnp.bfloat16),
+                       "xv": xv.astype(jnp.bfloat16)}
+
+        x, cache = jax.lax.scan(_wrap_body(body, act_spec, carry_tuple=False), x, params["layers"])
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            y, hf, conv = mamba_block(lp, h, cfg)
+            return y, {"h": hf.astype(jnp.float32),
+                       "conv_x": conv["x"], "conv_B": conv["B"],
+                       "conv_C": conv["C"]}
+
+        x, cache = jax.lax.scan(_wrap_body(body, act_spec, carry_tuple=False), x, params["layers"])
+    elif cfg.family == "hybrid":
+        W = min(cfg.sliding_window, cap) if cfg.sliding_window else cap
+
+        def body(h, lp):
+            def mbody(hh, mp):
+                y, hf, conv = mamba_block(mp, hh, cfg)
+                return y, {"h": hf.astype(jnp.float32), "conv_x": conv["x"],
+                           "conv_B": conv["B"], "conv_C": conv["C"]}
+
+            h, mcache = jax.lax.scan(mbody, h, lp["mamba"])
+            h, _, (k, v) = attn_block(lp["attn"], h, cfg,
+                                      positions=positions,
+                                      window=cfg.sliding_window)
+            kk = _fit_window(k, S, W) if cfg.sliding_window else pad_cap(k, W)
+            vv = _fit_window(v, S, W) if cfg.sliding_window else pad_cap(v, W)
+            out = dict(mcache)
+            out["k"] = kk.astype(jnp.bfloat16)
+            out["v"] = vv.astype(jnp.bfloat16)
+            return h, out
+
+        x, cache = jax.lax.scan(_wrap_body(body, act_spec, carry_tuple=False), x, params["layers"])
+    elif cfg.local_global_pattern:
+        W = min(cfg.sliding_window, cap)
+
+        def body(h, lp):
+            h, _, (kl, vl) = attn_block(lp["local"], h, cfg,
+                                        positions=positions,
+                                        window=cfg.sliding_window)
+            h, _, (kg, vg) = attn_block(lp["global"], h, cfg,
+                                        positions=positions)
+            return h, {"k_local": _fit_window(kl, S, W).astype(jnp.bfloat16),
+                       "v_local": _fit_window(vl, S, W).astype(jnp.bfloat16),
+                       "k_global": pad_cap(kg.astype(jnp.bfloat16), cap),
+                       "v_global": pad_cap(vg.astype(jnp.bfloat16), cap)}
+
+        x, cache = jax.lax.scan(_wrap_body(body, act_spec, carry_tuple=False), x, params["layers"])
+    else:
+        W = min(cfg.sliding_window, cap) if cfg.sliding_window else cap
+
+        def body(h, lp):
+            y, _, (k, v) = attn_block(lp, h, cfg, positions=positions,
+                                      window=cfg.sliding_window)
+            if cfg.sliding_window:
+                k, v = _fit_window(k, S, W), _fit_window(v, S, W)
+            else:
+                k, v = pad_cap(k, W), pad_cap(v, W)
+            return y, {"k": k.astype(jnp.bfloat16),
+                       "v": v.astype(jnp.bfloat16)}
+
+        x, cache = jax.lax.scan(_wrap_body(body, act_spec, carry_tuple=False), x, params["layers"])
+
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], cfg)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token step
+# ---------------------------------------------------------------------------
+
+def _attn_decode(p: Defs, x: jax.Array, cfg: ModelConfig, *,
+                 k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                 window: Optional[int],
+                 xk: Optional[jax.Array] = None,
+                 xv: Optional[jax.Array] = None):
+    # barrier: stops XLA hoisting dtype converts of the *whole stacked*
+    # cache out of the layer scan (a quantised cache would otherwise
+    # materialise a full-precision copy of itself)
+    k_cache, v_cache = jax.lax.optimization_barrier((k_cache, v_cache))
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = qkv(h, p["attn"], cfg, positions=pos[None, None],
+                  rope=cfg.use_rope)
+    k_cache, v_cache = update_cache(k_cache, v_cache, k, v, pos,
+                                    window=window)
+    o = decode_attention(q, k_cache, v_cache, pos=pos, window=window,
+                         logit_cap=cfg.attn_softcap, scale=cfg.attn_scale)
+    # barrier: keep the stacked ys cache in its storage dtype — without
+    # this, XLA convert-motion accumulates the whole per-layer cache
+    # stack in f32 (a CPU-backend bf16-dot legalization artifact)
+    k_cache, v_cache = jax.lax.optimization_barrier((k_cache, v_cache))
+    y = x + out_proj(o, p["attn"])
+    if xk is not None:
+        hx = rmsnorm(y, p["ln_x"], cfg.norm_eps)
+        qx, _, _ = qkv(hx, p["xattn"], cfg, positions=None, rope=False)
+        ox = decode_attention(qx, xk, xv, pos=jnp.asarray(xk.shape[1] - 1),
+                              logit_cap=cfg.attn_softcap,
+                              scale=cfg.attn_scale)
+        y = y + out_proj(ox, p["xattn"])
+    y, aux = _ffn_part(p, y, cfg)
+    return y, (k_cache, v_cache)
+
+
+def decode_step(params: Defs, cfg: ModelConfig, cache: Cache,
+                token: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Cache]:
+    """token (B,), pos scalar -> logits (B,V), updated cache."""
+    B = token.shape[0]
+    x = _embed_input(params, cfg, token[:, None], {}, pos0=0)
+    if not cfg.use_rope:
+        # learned positions: replace static slice with the dynamic one
+        x = embed(token[:, None], params["embed"], cfg) + \
+            jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0
+                                         )[None].astype(jnp.bfloat16)
+
+    if cfg.enc_dec:
+        def body(h, lc):
+            lp, c = lc
+            y, (k, v) = _attn_decode(lp, h, cfg, k_cache=c["k"],
+                                     v_cache=c["v"], pos=pos, window=None,
+                                     xk=c["xk"], xv=c["xv"])
+            return y, {"k": k, "v": v, "xk": c["xk"], "xv": c["xv"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "ssm":
+        def body(h, lc):
+            lp, c = lc
+            hh = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            y, hs, conv = ssm_mod.ssd_decode(
+                hh, lp["ssm"], cfg, h=c["h"],
+                conv_state={"x": c["conv_x"], "B": c["conv_B"],
+                            "C": c["conv_C"]})
+            return h + y, {"h": hs, "conv_x": conv["x"],
+                           "conv_B": conv["B"], "conv_C": conv["C"]}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "hybrid":
+        W = cache["k"].shape[2]
+
+        def body(h, lc):
+            lp, c = lc
+
+            def mbody(hh, mc):
+                mp, cc = mc
+                hn = rmsnorm(hh, mp["ln1"], cfg.norm_eps)
+                y, hs, conv = ssm_mod.ssd_decode(
+                    hn, mp["ssm"], cfg, h=cc["h"],
+                    conv_state={"x": cc["conv_x"], "B": cc["conv_B"],
+                                "C": cc["conv_C"]})
+                return hh + y, {"h": hs, "conv_x": conv["x"],
+                                "conv_B": conv["B"], "conv_C": conv["C"]}
+
+            mc_in = {k2: c[k2] for k2 in
+                     ("h", "conv_x", "conv_B", "conv_C")}
+            h, mcache = jax.lax.scan(mbody, h, (lp["mamba"], mc_in))
+            h, (k, v) = _attn_decode(
+                lp["attn"], h, cfg, k_cache=c["k"], v_cache=c["v"], pos=pos,
+                window=cfg.sliding_window if W == cfg.sliding_window
+                else None)
+            out = dict(mcache)
+            out["k"], out["v"] = k, v
+            return h, out
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.local_global_pattern:
+        W = cache["k_local"].shape[2]
+
+        def body(h, lc):
+            lp, c = lc
+            h, (kl, vl) = _attn_decode(
+                lp["local"], h, cfg, k_cache=c["k_local"],
+                v_cache=c["v_local"], pos=pos,
+                window=cfg.sliding_window if W == cfg.sliding_window
+                else None)
+            h, (kg, vg) = _attn_decode(lp["global"], h, cfg,
+                                       k_cache=c["k_global"],
+                                       v_cache=c["v_global"], pos=pos,
+                                       window=None)
+            return h, {"k_local": kl, "v_local": vl,
+                       "k_global": kg, "v_global": vg}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        W = cache["k"].shape[2]
+        win = (cfg.sliding_window
+               if cfg.sliding_window and W == cfg.sliding_window else None)
+
+        def body(h, lc):
+            lp, c = lc
+            y, (k, v) = _attn_decode(lp, h, cfg, k_cache=c["k"],
+                                     v_cache=c["v"], pos=pos, window=win)
+            return y, {"k": k, "v": v}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], cfg)
+    return logits[:, 0], new_cache

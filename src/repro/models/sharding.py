@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules — sharding-stable SCT edges (paper Sec. 3.1).
+
+The locality-aware domain decomposition demands that consecutive kernels
+sharing a vector observe the *same* partitioning so data persists on
+device.  Under GSPMD this becomes: every tensor dimension carries a
+**logical axis name**, rules map logical axes to mesh axes, and all kernels
+derive their shardings from the same rule set — by construction no edge of
+the SCT needs a resharding collective.
+
+Rules are priority lists: the first mesh axis (or axis tuple) that evenly
+divides the dimension wins; otherwise the dimension is replicated
+(the divisibility fallback is the paper's "relax the constraint, accept
+unbalance" escape hatch, Sec. 3.2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisChoice = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis -> ordered candidate mesh axes."""
+
+    table: Dict[str, Tuple[AxisChoice, ...]]
+
+    def lookup(self, logical: Optional[str]) -> Tuple[AxisChoice, ...]:
+        if logical is None:
+            return (None,)
+        return self.table.get(logical, (None,))
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = False,
+                  seq_shard: bool = False) -> Rules:
+    """Production rules for the (pod, data, model) / (data, model) meshes.
+
+    ``fsdp``: additionally shard the non-model dim of big weights over the
+    data axes (ZeRO-3-style; XLA inserts per-layer all-gathers under scan).
+    ``seq_shard``: shard long sequence dims over the model axis (context /
+    sequence parallelism for the 500k shapes).
+    """
+    dp: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in
+                                mesh.shape)
+    mdl = ("model",) if "model" in mesh.shape else ()
+    t: Dict[str, Tuple[AxisChoice, ...]] = {
+        "batch": (dp,),
+        "seq": ((mdl[0],) if seq_shard and mdl else (None,)),
+        "embed": ((dp,) if fsdp else (None,)),
+        "heads": mdl or (None,),
+        "kv_heads": mdl or (None,),
+        "head_dim": (None,),
+        "mlp": mdl or (None,),
+        "vocab": mdl or (None,),
+        "experts": mdl or (None,),
+        "expert_mlp": mdl or (None,),
+        "state": (None,),
+        "conv": (None,),
+        "cache_batch": (dp,),
+        "cache_seq": ((mdl[0],) if seq_shard and mdl else (None,)),
+        "frames": (None,),
+    }
+    return Rules(table=t)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Rules) -> P:
+    """PartitionSpec for one tensor: first divisible candidate per dim,
+    never reusing a mesh axis across dims."""
+    if len(shape) != len(logical):
+        raise ValueError(f"rank mismatch {shape} vs {logical}")
+    used: set = set()
+    out: List[AxisChoice] = []
+    for dim, name in zip(shape, logical):
+        chosen: AxisChoice = None
+        for cand in rules.lookup(name):
+            if cand is None:
+                continue
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used or a not in mesh.shape for a in axes):
+                continue
+            sz = 1
+            for a in axes:
+                sz *= mesh.shape[a]
+            if sz > 0 and dim % sz == 0:
+                chosen = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
+
+
+def tree_shardings(tree_logical, tree_shapes, mesh: Mesh, rules: Rules):
+    """Map a pytree of logical-axis tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sh: sharding_for(sh, lg, mesh, rules),
+        tree_logical, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x, logical: Sequence[Optional[str]], mesh: Mesh, rules: Rules):
+    """with_sharding_constraint via logical names (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, sharding_for(x.shape, logical, mesh, rules))
+    except (ValueError, RuntimeError):
+        return x

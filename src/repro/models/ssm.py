@@ -1,0 +1,214 @@
+"""Mamba2 — state-space duality (SSD) layer (arXiv:2405.21060).
+
+Training/prefill uses the **chunked SSD algorithm**: the sequence is split
+into chunks of length Q; within-chunk interactions are a masked-decay
+matmul (attention-like, MXU-friendly) and cross-chunk interactions pass a
+(nh, hd, d_state) state through a ``lax.scan`` recurrence — the Marrow
+*Loop* skeleton with device-side state update (paper Sec. 3.1, stage 3).
+Decode is the O(1) recurrent update on the carried state.
+
+The within-chunk part is the hot spot mirrored by the Pallas ``ssd_scan``
+kernel; this module is its pure-jnp oracle and the default (CPU / dry-run)
+path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Defs, ParamDef, rmsnorm
+
+
+def ssm_defs(cfg: ModelConfig) -> Defs:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ds = s.d_state
+    return {
+        "w_z": ParamDef((d, di), ("embed", "mlp")),
+        "w_x": ParamDef((d, di), ("embed", "mlp")),
+        "w_B": ParamDef((d, ds), ("embed", "state")),
+        "w_C": ParamDef((d, ds), ("embed", "state")),
+        "w_dt": ParamDef((d, nh), ("embed", "heads")),
+        "dt_bias": ParamDef((nh,), ("heads",), 0.0),
+        "A_log": ParamDef((nh,), ("heads",), 0.0),
+        "D": ParamDef((nh,), ("heads",), -1.0),
+        "conv_x": ParamDef((s.conv_dim, di), ("conv", "mlp"), 0.5),
+        "conv_B": ParamDef((s.conv_dim, ds), ("conv", "state"), 0.5),
+        "conv_C": ParamDef((s.conv_dim, ds), ("conv", "state"), 0.5),
+        "norm": ParamDef((di,), (None,), -1.0),
+        "w_out": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                buf: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (K,C).
+
+    ``buf``: (B,K-1,C) history for decode continuation (prepended).
+    """
+    K = w.shape[0]
+    if buf is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(y)
+
+
+def _project(x: jax.Array, p: Defs, cfg: ModelConfig):
+    s = cfg.ssm
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xr, Br, Cr, dt
+
+
+def ssd_prefill(x: jax.Array, p: Defs, cfg: ModelConfig, *,
+                h0: Optional[jax.Array] = None,
+                conv_state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence SSD. x: (B,S,d_model) -> (y, h_final, conv_state).
+
+    Ragged lengths are handled by splitting off the sub-chunk tail and
+    chaining the carried state (conv buffers hold *raw* projections, so
+    the continuation is exact).
+    """
+    s = cfg.ssm
+    B, S, _ = x.shape
+    di, nh, ds, Q = s.d_inner(cfg.d_model), s.n_heads(cfg.d_model), \
+        s.d_state, min(s.chunk, x.shape[1])
+    if S % Q:
+        main = (S // Q) * Q
+        y1, h1, conv1 = ssd_prefill(x[:, :main], p, cfg, h0=h0,
+                                    conv_state=conv_state)
+        y2, h2, conv2 = ssd_prefill(x[:, main:], p, cfg, h0=h1,
+                                    conv_state=conv1)
+        return jnp.concatenate([y1, y2], axis=1), h2, conv2
+    nc = S // Q
+    z, xr, Br, Cr, dt = _project(x, p, cfg)
+    bx = None if conv_state is None else conv_state["x"]
+    bB = None if conv_state is None else conv_state["B"]
+    bC = None if conv_state is None else conv_state["C"]
+    K1 = s.conv_dim - 1
+
+    def _tail(buf, cur):
+        """Last K-1 raw projections incl. history (short-segment safe)."""
+        hist = cur if buf is None else jnp.concatenate(
+            [buf.astype(cur.dtype), cur], axis=1)
+        if hist.shape[1] < K1:
+            hist = jnp.pad(hist, ((0, 0), (K1 - hist.shape[1], 0), (0, 0)))
+        return hist[:, hist.shape[1] - K1:]
+
+    # conv buffers carry *raw* (pre-conv) projections for continuation
+    new_conv = {"x": _tail(bx, xr).astype(jnp.bfloat16),
+                "B": _tail(bB, Br).astype(jnp.bfloat16),
+                "C": _tail(bC, Cr).astype(jnp.bfloat16)}
+    xr = causal_conv(xr, p["conv_x"], bx)
+    Br = causal_conv(Br, p["conv_B"], bB)
+    Cr = causal_conv(Cr, p["conv_C"], bC)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (nh,) negative
+    hd = di // nh
+    xh = xr.reshape(B, nc, Q, nh, hd)                     # (B,nc,Q,nh,hd)
+    Bc = Br.reshape(B, nc, Q, ds).astype(jnp.float32)
+    Cc = Cr.reshape(B, nc, Q, ds).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, nh)                        # f32
+    h_init = (jnp.zeros((B, nh, ds, hd), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # ---- chunk loop: within-chunk matmuls + cross-chunk recurrence -------
+    # The within-chunk work lives *inside* the scan so the (B,Q,Q,nh)
+    # decay tensor exists for one chunk at a time (the chunked-SSD
+    # formulation; the Pallas ``ssd_scan`` kernel fuses the same loop).
+    def step(h, inp):
+        xh_c, B_c, C_c, dt_c = inp                        # one chunk each
+        la = dt_c * A                                     # (B,Q,nh) log-decay
+        cum = jnp.cumsum(la, axis=1)                      # (B,Q,nh)
+        xdt = xh_c.astype(jnp.float32) * dt_c[..., None]  # (B,Q,nh,hd)
+        scores = jnp.einsum("bqs,bks->bqk", C_c, B_c)     # (B,Q,Q)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,nh)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        y = jnp.einsum("bqk,bqkh,bkhe->bqhe", scores, L, xdt)
+        # contribution of the carried state (chunk-initial h)
+        y = y + jnp.einsum("bqs,bhse,bqh->bqhe", C_c, h, jnp.exp(cum))
+        # fold the chunk into the state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)      # (B,Q,nh)
+        S_c = jnp.einsum("bqs,bqh,bqhe->bhse", B_c, decay_to_end, xdt)
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + S_c
+        return h_new, y
+
+    h_final, y = jax.lax.scan(
+        step, h_init,
+        (xh.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+         Cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3)))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    y = y + xr.reshape(B, S, nh, -1).astype(jnp.float32) \
+        * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, {"scale": p["norm"]}, cfg.norm_eps)
+    return y @ p["w_out"], h_final, new_conv
+
+
+def ssd_decode(x: jax.Array, p: Defs, cfg: ModelConfig, *,
+               h: jax.Array, conv_state: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent step. x: (B,1,d_model); h: (B,nh,ds,hd)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    di, nh, ds = s.d_inner(cfg.d_model), s.n_heads(cfg.d_model), s.d_state
+    z, xr, Br, Cr, dt = _project(x, p, cfg)
+    K = s.conv_dim
+
+    def conv1(val, w, buf):
+        window = jnp.concatenate([buf.astype(val.dtype), val], axis=1)
+        y = jnp.einsum("bkc,kc->bc", window, w)[:, None]
+        return jax.nn.silu(y), window[:, 1:]
+
+    xr, nbx = conv1(xr, p["conv_x"], conv_state["x"])
+    Br, nbB = conv1(Br, p["conv_B"], conv_state["B"])
+    Cr, nbC = conv1(Cr, p["conv_C"], conv_state["C"])
+    new_conv = {"x": nbx.astype(conv_state["x"].dtype),
+                "B": nbB.astype(conv_state["B"].dtype),
+                "C": nbC.astype(conv_state["C"].dtype)}
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xr.reshape(B, nh, -1).astype(jnp.float32)        # (B,nh,hd)
+    dt1 = dt.reshape(B, nh)                               # f32
+    a = jnp.exp(dt1 * A)                                  # (B,nh)
+    Bv = Br.reshape(B, ds).astype(jnp.float32)
+    Cv = Cr.reshape(B, ds).astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    h_new = hf * a[:, :, None, None] + jnp.einsum(
+        "bs,bh,bhe->bhse", Bv, dt1, xh)
+    y = jnp.einsum("bs,bhse->bhe", Cv, h_new)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, {"scale": p["norm"]}, cfg.norm_eps)
+    return y @ p["w_out"], h_new.astype(h.dtype), new_conv
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    nh = s.n_heads(cfg.d_model)
+    return jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype)
+
+
+def init_conv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    K = s.conv_dim - 1
+    return {"x": jnp.zeros((batch, K, di), dtype),
+            "B": jnp.zeros((batch, K, s.d_state), dtype),
+            "C": jnp.zeros((batch, K, s.d_state), dtype)}

@@ -1,0 +1,10 @@
+"""Optimizer substrate (pure JAX — no optax on this container)."""
+from repro.optim.adamw import AdamW, AdamWConfig, OptState, global_norm
+from repro.optim.schedules import (constant, cosine_schedule, linear_warmup,
+                                   wsd_schedule)
+from repro.optim.compress import (CompressionState, compress_gradients,
+                                  decompress_sum, init_compression,
+                                  quantize_int8, dequantize_int8,
+                                  shared_scale)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

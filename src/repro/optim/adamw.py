@@ -1,0 +1,115 @@
+"""AdamW with decoupled weight decay, global-norm clipping, f32 state.
+
+Parameters may live in bf16 (the forward dtype); the optimizer keeps f32
+first/second moments and applies the update in f32 before casting back, so
+long trainings do not lose mantissa to bf16 accumulation.  The state is a
+plain pytree and therefore checkpointable / shardable like any other — on
+the production mesh the moments inherit the parameters' NamedSharding
+(same tree structure), which is exactly ZeRO-1 when the params are FSDP-
+sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # first moment (f32, params tree)
+    v: Any                   # second moment (f32, params tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Union[float, Schedule] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0            # 0 disables clipping
+    # decay mask: params whose path matches any of these substrings are
+    # exempt from weight decay (norms, biases, scalar gains)
+    no_decay: Tuple[str, ...] = ("norm", "scale", "bias", "dt_bias",
+                                 "A_log", "D")
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+class AdamW:
+    """init/update pair closed over a config (optax-style, dependency-free)."""
+
+    def __init__(self, config: AdamWConfig = AdamWConfig()):
+        self.config = config
+
+    # -- state ---------------------------------------------------------------
+    def init(self, params: Any) -> OptState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                        v=jax.tree.map(jnp.copy, zeros))
+
+    # -- decay mask ------------------------------------------------------------
+    def _decay_mask(self, params: Any) -> Any:
+        paths = jax.tree_util.tree_flatten_with_path(params)[0]
+
+        def decayed(path) -> float:
+            key = "/".join(str(getattr(p, "key", p)) for p in path).lower()
+            return 0.0 if any(s in key for s in self.config.no_decay) else 1.0
+
+        mask = [decayed(p) for p, _ in paths]
+        treedef = jax.tree.structure(params)
+        return jax.tree.unflatten(treedef, mask)
+
+    # -- update ----------------------------------------------------------------
+    def update(self, grads: Any, state: OptState, params: Any
+               ) -> Tuple[Any, OptState, jax.Array]:
+        """Returns (new_params, new_state, grad_norm)."""
+        c = self.config
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if c.grad_clip and c.grad_clip > 0:
+            scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+        else:
+            scale = jnp.ones((), jnp.float32)
+
+        lr = c.lr_at(step)
+        b1c = 1.0 - c.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - c.b2 ** step.astype(jnp.float32)
+        mask = self._decay_mask(params)
+
+        def upd(g, m, v, p, wd):
+            g = g.astype(jnp.float32) * scale
+            m_new = c.b1 * m + (1 - c.b1) * g
+            v_new = c.b2 * v + (1 - c.b2) * g * g
+            mhat = m_new / b1c
+            vhat = v_new / b2c
+            delta = mhat / (jnp.sqrt(vhat) + c.eps)
+            delta = delta + c.weight_decay * wd * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return p_new.astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params, mask)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, m=new_m, v=new_v), gnorm

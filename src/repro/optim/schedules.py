@@ -1,0 +1,49 @@
+"""Learning-rate schedules: cosine and WSD (minicpm, arXiv:2404.06395).
+
+All schedules are jnp-traceable ``step -> lr`` functions, usable both
+inside jitted train steps and from host code.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+    return f
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    return f
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_ratio: float = 0.1):
+    """Linear warmup then cosine decay to final_ratio * lr."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_ratio + (1 - final_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, lr * cos)
+    return f
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 final_ratio: float = 0.01):
+    """Warmup–Stable–Decay (minicpm): flat plateau, then a short
+    exponential-style decay to ``final_ratio * lr`` over ``decay`` steps."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * final_ratio ** in_decay          # exp interp lr -> ratio*lr
+        out = jnp.where(s < warmup, warm,
+                        jnp.where(s < warmup + stable, lr, dec))
+        return out
+    return f

@@ -1,0 +1,9 @@
+"""Runtime: train/serve step builders, loss, microbatching, remat."""
+from repro.runtime.loss import chunked_xent, xent_from_logits
+from repro.runtime.serve import (Request, ServeEngine, greedy,
+                                 make_decode_step, make_prefill_step, sample)
+from repro.runtime.train import (REMAT_POLICIES, RuntimeConfig, TrainState,
+                                 init_state, make_dp_train_step_int8,
+                                 make_loss_fn, make_train_step)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

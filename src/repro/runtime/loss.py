@@ -1,0 +1,74 @@
+"""Cross-entropy losses: plain, TP-friendly, and seq-chunked.
+
+The seq-chunked variant never materialises the (B, S, V) logits tensor —
+it scans the unembedding + log-softmax over sequence chunks, which is the
+difference between fitting and OOMing at vocab=256k, seq=4k (the logits
+would be 8x the size of all residuals combined).  Under GSPMD with the
+vocabulary sharded over the *model* axis the per-chunk logsumexp lowers
+to one small all-reduce per chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Defs, mask_padded_vocab, softcap
+
+
+def xent_from_logits(logits: jax.Array, labels: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token loss. logits (B,S,V) any float dtype, labels (B,S)
+    int32 with -1 = ignore. Returns (sum_loss, n_valid) in f32."""
+    lf = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    per_tok = (lse - gold) * mask.astype(jnp.float32)
+    return per_tok.sum(), mask.sum().astype(jnp.float32)
+
+
+def chunked_xent(x: jax.Array, params: Defs, cfg: ModelConfig,
+                 labels: jax.Array, *, chunks: int = 1
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Unembed + cross entropy without materialising full logits.
+
+    x: final hidden states (B, S, d).  ``chunks`` divides S; each chunk
+    projects to (B, S/chunks, V), reduces to scalars, and is freed before
+    the next chunk (lax.scan sequentialises them).
+    """
+    B, S, _ = x.shape
+    if chunks <= 1 or S % chunks:
+        w = params["embed"]["tokens"].T if cfg.tie_embeddings \
+            else params["embed"]["unembed"]
+        logits = mask_padded_vocab(
+            softcap(x @ w.astype(x.dtype), cfg.final_softcap), cfg)
+        return xent_from_logits(logits, labels)
+    C = S // chunks
+    xc = x.reshape(B, chunks, C, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, chunks, C).transpose(1, 0, 2)
+    w = params["embed"]["tokens"].T if cfg.tie_embeddings \
+        else params["embed"]["unembed"]
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(xi, li):
+        # remat: the (B, C, V) logits chunk is recomputed in the backward
+        # pass instead of being saved per chunk (V can be 256k).
+        logits = mask_padded_vocab(
+            softcap(xi @ w.astype(xi.dtype), cfg.final_softcap), cfg)
+        return xent_from_logits(logits, li)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        s, n = chunk_loss(*inp)
+        return (tot + s, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return tot, cnt

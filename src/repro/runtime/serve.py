@@ -1,0 +1,173 @@
+"""Serving runtime: prefill + decode step builders and a batched engine.
+
+``make_prefill_step`` / ``make_decode_step`` produce the pure functions
+that the dry-run lowers for the ``prefill_*`` / ``decode_*`` / ``long_*``
+shapes.  ``ServeEngine`` is the host-side driver used by the serving
+example: continuous batched decode over a slot-based request pool
+(join/leave between steps, greedy or temperature sampling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import Cache, decode_step, init_cache, prefill
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: Optional[int] = None):
+    """(params, tokens, **extras) -> (last-token logits (B,V), cache)."""
+
+    def prefill_step(params, tokens, **extras):
+        return prefill(params, cfg, tokens, capacity=capacity, **extras)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, token (B,), pos ()) -> (logits (B,V), cache)."""
+
+    def step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos)
+
+    return step
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           temperature: float = 1.0) -> jax.Array:
+    if temperature <= 0:
+        return greedy(logits)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class ServeEngine:
+    """Slot-based continuous batching (host-side orchestration).
+
+    A fixed decode batch of ``slots`` sequences advances one token per
+    ``step()``; finished sequences free their slot, queued requests are
+    prefilled into free slots.  All jitted functions are shape-stable
+    (slot count and cache capacity fixed), so serving never recompiles.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 capacity: int, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self._prefill1 = jax.jit(make_prefill_step(cfg, capacity))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+        self.cache: Cache = init_cache(cfg, slots, capacity)
+        self.cur_token = jnp.zeros((slots,), jnp.int32)
+        self.pos = jnp.zeros((), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._next_rid = 0
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, prompt=list(prompt),
+                                  max_new=max_new))
+        return rid
+
+    def step(self) -> int:
+        """Admit queued work, decode one token for every active slot.
+        Returns the number of active sequences."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        self.key, sub = jax.random.split(self.key)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.cur_token, self.pos)
+        nxt = sample(logits, sub, self.temperature)
+        self.cur_token = nxt
+        self.pos = self.pos + 1
+        toks = jax.device_get(nxt)
+        n_active = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(toks[i]))
+            if req.done:
+                self.finished.append(req)
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.finished
+
+    # -- internals --------------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (batch=1 prefill, then
+        splice the slot's cache rows into the shared decode cache)."""
+        for i in range(self.slots):
+            if self.active[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, c1 = self._prefill1(self.params, prompt)
+            self.cache = _splice(self.cache, c1, i)
+            first = greedy(logits)[0]
+            self.cur_token = self.cur_token.at[i].set(first)
+            self.pos = jnp.maximum(self.pos, len(req.prompt))
+            req.out.append(int(jax.device_get(first)))
+            if req.done:
+                self.finished.append(req)
+            else:
+                self.active[i] = req
+
+
+def _splice(cache: Cache, one: Cache, slot: int) -> Cache:
+    """Insert a batch-1 prefill cache into slot ``slot`` of the pool cache.
+
+    Pool and prefill caches share tree structure and rank; the batch dim
+    is the (first) dim where the prefill tensor is 1 and the pool tensor
+    is ``slots``.  Shorter seq dims (prefill capacity < pool capacity) are
+    zero-padded at the tail.
+    """
+    out = {}
+    for k, v in cache.items():
+        src = one[k].astype(v.dtype)
+        bdim = next(d for d in range(v.ndim)
+                    if src.shape[d] == 1 and v.shape[d] != src.shape[d])
+        pads = [(0, v.shape[d] - src.shape[d]) if d != bdim else (0, 0)
+                for d in range(src.ndim)]
+        if any(p != (0, 0) for p in pads):
+            src = jnp.pad(src, pads)
+        start = [0] * v.ndim
+        start[bdim] = slot
+        out[k] = jax.lax.dynamic_update_slice(v, src, start)
+    return out

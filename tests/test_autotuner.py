@@ -1,0 +1,75 @@
+"""Algorithm 1 (profile construction) on the calibrated simulator
+(paper Sec. 3.2.2, Fig. 5)."""
+import math
+
+import pytest
+
+from repro.core import (AcceleratorPlatform, DeviceInfo, HostPlatform,
+                        KnowledgeBase, TunerParams, build_profile)
+from repro.core.knowledge_base import PlatformConfig
+from repro.core.distribution import Distribution
+from repro.core.spec import Workload
+
+
+def analytic_evaluator(best_fission="L2", best_overlap=3, opt_share=0.7):
+    """Convex synthetic landscape with a known optimum."""
+    fission_rank = {"L1": 1, "L2": 0, "L3": 1, "NUMA": 2, "NO_FISSION": 3}
+
+    def evaluate(cfg: PlatformConfig, dist: Distribution):
+        base = 1.0
+        base += 0.08 * abs(fission_rank[cfg.fission_level]
+                           - fission_rank[best_fission])
+        base += 0.05 * abs(cfg.overlap - best_overlap)
+        base += 1.5 * (dist.a - opt_share) ** 2
+        ta = base * dist.a / opt_share
+        tb = base * dist.b / (1 - opt_share)
+        return max(ta, tb), ta, tb
+
+    return evaluate
+
+
+def platforms():
+    host = HostPlatform(DeviceInfo("cpu", "cpu", compute_units=16),
+                        topology={"L1": 16, "L2": 8, "L3": 2, "NUMA": 1,
+                                  "NO_FISSION": 1})
+    accel = AcceleratorPlatform([DeviceInfo("gpu", "gpu")], max_overlap=6)
+    return host, accel
+
+
+class TestAlgorithm1:
+    def test_finds_known_optimum(self):
+        host, accel = platforms()
+        res = build_profile("sct", Workload((1 << 20,)), host=host,
+                            accel=accel, evaluate=analytic_evaluator(),
+                            params=TunerParams(precision=1e-4,
+                                               number_executions=1))
+        assert res.profile.config.fission_level == "L2"
+        assert res.profile.share_a == pytest.approx(0.7, abs=0.1)
+        assert res.profile.best_time < math.inf
+
+    def test_search_is_pruned(self):
+        """Discard-on-no-improvement: far fewer evals than the full grid."""
+        host, accel = platforms()
+        res = build_profile("sct", Workload((1 << 18,)), host=host,
+                            accel=accel, evaluate=analytic_evaluator(),
+                            params=TunerParams(precision=1e-3,
+                                               number_executions=1,
+                                               max_distribution_iters=8))
+        full_grid = 5 * 6 * 12 * 8
+        assert res.evaluations < full_grid / 3
+
+    def test_trace_is_fig5_material(self):
+        host, accel = platforms()
+        res = build_profile("sct", Workload((1 << 16,)), host=host,
+                            accel=accel, evaluate=analytic_evaluator(),
+                            params=TunerParams(number_executions=1))
+        assert len(res.trace) == res.evaluations
+        assert all(t.time > 0 for t in res.trace)
+
+    def test_persists_to_kb(self):
+        host, accel = platforms()
+        kb = KnowledgeBase()
+        build_profile("sct", Workload((4096,)), host=host, accel=accel,
+                      evaluate=analytic_evaluator(), kb=kb,
+                      params=TunerParams(number_executions=1))
+        assert kb.exact("sct", Workload((4096,))) is not None

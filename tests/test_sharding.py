@@ -1,0 +1,127 @@
+"""Logical-axis sharding rules + HLO analyzer units (no 512-device init:
+these tests build tiny meshes from the single host device where needed,
+or test the pure functions directly)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import (Analysis, analyze,
+                                       parse_computations, shape_bytes,
+                                       shape_numel)
+from repro.launch.roofline import KIND_FACTOR, Roofline, roofline
+from repro.models.sharding import Rules, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: spec_for only reads .shape (a dict)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+RULES = Rules(table={
+    "batch": (("pod", "data"),),
+    "embed": (("pod", "data"),),
+    "heads": ("model",),
+    "vocab": ("model",),
+    "mlp": ("model",),
+})
+
+
+class TestSpecFor:
+    def test_divisible_dims_shard(self):
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        spec = spec_for((256, 4096), ("batch", None), mesh, RULES)
+        assert spec == P(("pod", "data"))
+
+    def test_indivisible_falls_back_to_replicated(self):
+        """The paper's 'relax the constraint' escape hatch."""
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        spec = spec_for((49155, 64), ("vocab", None), mesh, RULES)
+        assert spec == P()                      # 49155 % 16 != 0
+
+    def test_no_axis_reuse_within_tensor(self):
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        spec = spec_for((64, 32), ("heads", "mlp"), mesh, RULES)
+        # both want 'model'; only the first gets it
+        assert spec == P("model")
+
+    def test_unknown_logical_replicated(self):
+        mesh = FakeMesh(data=4, model=2)
+        assert spec_for((8, 8), ("nope", None), mesh, RULES) == P()
+
+
+class TestHloAnalysis:
+    HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), to_apply=%sum
+  %c1 = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %c1)
+  ROOT %t = (s32[], f32[8,8]) tuple(%iv2, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8] parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%c0, %x)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+    def test_shape_bytes(self):
+        assert shape_bytes("f32[8,8]") == 256
+        assert shape_bytes("bf16[4,2]") == 16
+        assert shape_bytes("(s32[], f32[2,2])") == 20
+        assert shape_numel("f32[3,5]") == 15
+
+    def test_loop_multiplied_flops_and_collectives(self):
+        a = analyze(self.HLO)
+        # 5 iterations x (2*8*8*8) dot flops (+ elementwise adds)
+        assert a.flops == pytest.approx(5 * 1024, rel=0.05)
+        assert a.collective_bytes["all-reduce"] == pytest.approx(5 * 256)
+        assert a.collective_count["all-reduce"] == 5
+
+    def test_computation_parse(self):
+        comps = parse_computations(self.HLO)
+        assert "__entry__" in comps
+        assert "body" in comps and "cond" in comps
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        r = roofline(per_chip_flops=197e12, per_chip_hbm_bytes=819e9 / 2,
+                     per_chip_collective_bytes=0, chips=256,
+                     active_params=1e9, tokens=1e6, kind="train")
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(0.5)
+        assert r.bottleneck == "compute"
+        assert r.step_time_s == pytest.approx(1.0)
+
+    def test_model_flops_kinds(self):
+        for kind, f in KIND_FACTOR.items():
+            r = roofline(per_chip_flops=1, per_chip_hbm_bytes=1,
+                         per_chip_collective_bytes=1, chips=2,
+                         active_params=10, tokens=5, kind=kind)
+            assert r.model_flops == f * 50
+
+    def test_roofline_fraction_definition(self):
+        r = roofline(per_chip_flops=197e12, per_chip_hbm_bytes=0,
+                     per_chip_collective_bytes=0, chips=1,
+                     active_params=1, tokens=197e12 / 6, kind="train")
+        # model flops == hlo flops == chips*peak*step_time -> fraction 1
+        assert r.roofline_fraction == pytest.approx(1.0)

@@ -1,0 +1,44 @@
+"""Simulator calibration + benchmark-harness integration tests."""
+import pytest
+
+from benchmarks.fission import OPTERON_TOPOLOGY, simulate_fission
+from benchmarks.hybrid import tune_cell
+from benchmarks.paper_suite import BENCHMARKS, cost_model_for, workload_for
+from repro.core.simulator import (CACHE_BYTES, LOCALITY_FACTOR, SimDevice,
+                                  SimulatedExecutor)
+
+
+class TestSimulator:
+    def test_deterministic(self):
+        from benchmarks.fission import simulate_fission
+        a = simulate_fission("saxpy", 10 ** 6)
+        b = simulate_fission("saxpy", 10 ** 6)
+        assert a["times"] == b["times"]
+
+    def test_fission_beats_no_fission(self):
+        """The paper's central CPU result, on the calibrated box."""
+        r = simulate_fission("fft", 256)
+        assert r["best_level"] != "NO_FISSION"
+        assert r["speedup_vs_nofission"] > 1.3
+
+    def test_locality_calibration_order(self):
+        assert LOCALITY_FACTOR["L2"] > LOCALITY_FACTOR["L3"] \
+            > LOCALITY_FACTOR["NO_FISSION"]
+
+
+class TestHybridBench:
+    def test_hybrid_beats_gpu_only_for_comm_bound(self):
+        """Paper Fig 7: saxpy/segmentation gain ~2x from the CPU."""
+        r = tune_cell("saxpy", 10 ** 7, n_gpus=1)
+        assert r["speedup"] > 1.2
+        assert 0.0 < r["gpu_share"] < 1.0
+
+    def test_nbody_stays_gpu_only(self):
+        """Paper: compute-bound NBody assigns (almost) all work to GPUs."""
+        r = tune_cell("nbody", 32768, n_gpus=1)
+        assert r["gpu_share"] > 0.9
+
+    def test_cpu_share_shrinks_with_more_gpus(self):
+        r1 = tune_cell("segmentation", 512, n_gpus=1)
+        r2 = tune_cell("segmentation", 512, n_gpus=2)
+        assert (1 - r2["gpu_share"]) <= (1 - r1["gpu_share"]) + 0.05
