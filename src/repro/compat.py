@@ -1,0 +1,25 @@
+"""Version compatibility shims for the pinned toolchain.
+
+``jax.shard_map`` became a top-level API (with the ``check_vma`` kwarg)
+after 0.4.x; older releases expose it as
+``jax.experimental.shard_map.shard_map`` with the equivalent kwarg named
+``check_rep``.  Import :func:`shard_map` from here everywhere so model
+and runtime code can use the modern spelling unconditionally.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map           # jax >= 0.5 style top-level API
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True,
+                  **kwargs):
+        kwargs.setdefault("check_rep", check_vma)
+        if f is None:
+            return lambda g: _shard_map_exp(g, mesh=mesh, in_specs=in_specs,
+                                            out_specs=out_specs, **kwargs)
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+__all__ = ["shard_map"]

@@ -4,6 +4,8 @@ Layers (paper Fig. 2):
   Library  — :mod:`repro.core.skeletons` (SCTs), :mod:`repro.core.spec`
              (kernel interfaces, Vector/Scalar types, traits, merges).
   Runtime  — :mod:`repro.core.scheduler` (Fig. 4 workflow),
+             :mod:`repro.core.faults` (fault taxonomy, deterministic
+             injection, retry policy, device-health quarantine),
              :mod:`repro.core.decomposition` (locality-aware domain
              decomposition), :mod:`repro.core.distribution` (binary-search
              workload distribution), :mod:`repro.core.autotuner`
@@ -19,6 +21,9 @@ from repro.core.distribution import (AdaptiveBinarySearch, Distribution,
                                      WorkloadDistributionGenerator,
                                      balance_until_stable, run_binary_search)
 from repro.core.executor import Future, Session, ThreadedExecutor
+from repro.core.faults import (DeviceHealth, ExecutionError, FaultInjector,
+                               FaultPolicy, FaultRecord, PartitionLost,
+                               SlotFailure, SlotTimeout)
 from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
                                        Profile, RBFNetwork)
 from repro.core.load_balancer import ExecutionStats, LoadBalancer

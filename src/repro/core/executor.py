@@ -17,17 +17,36 @@ partition, and merges the partial results:
 This is the measurement backend for CPU-side experiments (fission table);
 scheduling-policy experiments at device-pool scale use the calibrated
 :mod:`repro.core.simulator` instead (same interface).
+
+Failure semantics
+-----------------
+Execution is tracked per *segment* — a contiguous domain-unit range bound
+to one slot (initially one segment per slot).  A slot that raises is
+contained: its exception becomes a :class:`~repro.core.faults.FaultRecord`
+instead of crashing the run, the slot is considered dead for the rest of
+the request, and its segment is re-split across the surviving slots and
+retried (bounded by :class:`~repro.core.faults.FaultPolicy.max_attempts`).
+A per-slot watchdog deadline — ``watchdog_multiple x profile.best_time``
+— declares stalled slots hung (:class:`~repro.core.faults.SlotTimeout`
+semantics; note a hung *thread* cannot be killed in Python, only
+abandoned).  When retries are exhausted or no slot survives, a terminal
+:class:`~repro.core.faults.ExecutionError` carries the full per-slot
+fault history.  Because retried segments tile the lost unit range in
+domain order, merged outputs are bit-identical to the fault-free result
+for concatenated outputs, and identical for associative merge functions.
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.decomposition import ConcretePartitioning
+from repro.core.faults import (ExecutionError, FaultInjector, FaultPolicy,
+                               FaultRecord, InjectedFault, split_units)
 from repro.core.knowledge_base import Profile
 from repro.core.skeletons import SCT, PartitionInfo
 from repro.core.spec import ArgSpec, MergeFn, Transfer, Workload
@@ -47,59 +66,183 @@ class _SlotResult:
     seconds: float
 
 
+@dataclasses.dataclass
+class _Segment:
+    """A contiguous domain-unit range assigned to one execution slot."""
+
+    slot: int                   # index into part.slots
+    start: int                  # domain-unit offset of the range
+    units: int                  # domain units in the range
+
+
 class ThreadedExecutor:
-    """Executes SCT partitions on host threads and times each slot."""
+    """Executes SCT partitions on host threads and times each slot.
+
+    ``injector`` (optional) deterministically injects crashes/stalls for
+    fault-tolerance experiments; ``policy`` bounds the retry ladder and
+    derives the watchdog deadline (see module docstring).
+    """
 
     def __init__(self, *, merges: Optional[Dict[str, MergeFn]] = None,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 injector: Optional[FaultInjector] = None,
+                 policy: FaultPolicy = FaultPolicy()):
         self.merges = dict(merges or {})
         self.max_workers = max_workers
+        self.injector = injector
+        self.policy = policy
         self._last_times: List[float] = []
         self._last_n_a: int = 0
+        self.last_failures: List[FaultRecord] = []
+        self.last_retries: int = 0
 
     # -- Scheduler interface -------------------------------------------------
     def execute(self, sct: SCT, part: ConcretePartitioning,
                 arrays: Dict[str, Any], profile: Profile
                 ) -> Tuple[Dict[str, Any], List[float]]:
-        plan = part.plan
-        witness = next((v.name for v in plan.vectors.values() if not v.copy),
-                       None)
-        slot_envs: List[Dict[str, Any]] = []
-        for j, slot in enumerate(part.slots):
-            env: Dict[str, Any] = {}
-            for name, arr in arrays.items():
-                if name in plan.vectors:
-                    env[name] = part.slices(name, arr)[j]
+        deadline = self.policy.deadline(getattr(profile, "best_time", None))
+
+        segments: List[_Segment] = []
+        acc = 0
+        for j, units in enumerate(part.units):
+            segments.append(_Segment(slot=j, start=acc, units=units))
+            acc += units
+
+        records: List[FaultRecord] = []
+        retries = 0
+        dead: set = set()
+        done: List[Tuple[_Segment, _SlotResult]] = []
+        per_slot_seconds = [0.0] * len(part.slots)
+
+        pending = segments
+        for attempt in range(self.policy.max_attempts):
+            outcomes = self._run_attempt(sct, part, arrays, pending,
+                                         deadline, attempt)
+            failed: List[_Segment] = []
+            for seg, res in zip(pending, outcomes):
+                per_slot_seconds[seg.slot] += res.seconds
+                if isinstance(res, FaultRecord):
+                    records.append(res)
+                    dead.add(seg.slot)
+                    failed.append(seg)
                 else:
-                    env[name] = arr         # scalars & undeclared passthrough
-            if witness is not None:
-                env["__partition__"] = PartitionInfo(
-                    size=part.sizes(witness)[j],
-                    offset=part.offsets(witness)[j])
-            slot_envs.append(env)
+                    done.append((seg, res))
+            lost = [s for s in failed if s.units > 0]
+            if not lost:
+                break
+            alive = [j for j in range(len(part.slots)) if j not in dead]
+            if not alive:
+                raise ExecutionError(
+                    "partition lost: no surviving execution slot can adopt "
+                    f"{sum(s.units for s in lost)} domain units",
+                    records, attempt + 1)
+            if attempt == self.policy.max_attempts - 1:
+                raise ExecutionError(
+                    f"retries exhausted after {self.policy.max_attempts} "
+                    "attempts", records, attempt + 1)
+            # re-split each lost range across the surviving slots, in
+            # domain order, so the merged result stays bit-identical
+            pending = []
+            for seg in lost:
+                counts = split_units(seg.units, len(alive))
+                start = seg.start
+                for j, u in zip(alive, counts):
+                    if u:
+                        pending.append(_Segment(slot=j, start=start, units=u))
+                        start += u
+            retries += 1
 
-        results: List[Optional[_SlotResult]] = [None] * len(part.slots)
-
-        def work(j: int) -> None:
-            t0 = time.perf_counter()
-            out_env = sct.apply(dict(slot_envs[j]))
-            for v in out_env.values():
-                if hasattr(v, "block_until_ready"):
-                    v.block_until_ready()
-            results[j] = _SlotResult(out_env, time.perf_counter() - t0)
-
-        nw = self.max_workers or len(part.slots)
-        if len(part.slots) == 1:
-            work(0)
-        else:
-            with cf.ThreadPoolExecutor(max_workers=nw) as pool:
-                list(pool.map(work, range(len(part.slots))))
-
-        outputs = self._merge(sct, part, [r.outputs for r in results])
-        times = [r.seconds for r in results]
+        done.sort(key=lambda sr: sr[0].start)
+        outputs = self._merge(sct, part, [r.outputs for _, r in done])
+        times = per_slot_seconds
         self._last_times = times
         self._last_n_a = sum(1 for s in part.slots if s.device_type != "cpu")
+        self.last_failures = records
+        self.last_retries = retries
         return outputs, times
+
+    def _run_attempt(self, sct: SCT, part: ConcretePartitioning,
+                     arrays: Dict[str, Any], segments: Sequence[_Segment],
+                     deadline: Optional[float], attempt: int
+                     ) -> List[Union[_SlotResult, FaultRecord]]:
+        """Run one round of segments concurrently, containing all faults."""
+
+        def work(seg: _Segment) -> Union[_SlotResult, FaultRecord]:
+            slot = part.slots[seg.slot]
+            t0 = time.perf_counter()
+            try:
+                if self.injector is not None:
+                    kind = self.injector.decide(slot.device)
+                    if kind == "crash":
+                        raise InjectedFault(
+                            f"injected crash on {slot.device}")
+                    if kind == "stall":
+                        time.sleep(self.injector.stall_seconds)
+                env = self._segment_env(part, arrays, seg)
+                out_env = sct.apply(env)
+                for v in out_env.values():
+                    if hasattr(v, "block_until_ready"):
+                        v.block_until_ready()
+                return _SlotResult(out_env, time.perf_counter() - t0)
+            except Exception as e:       # containment: never crosses the slot
+                return FaultRecord(
+                    slot=seg.slot, device=slot.device,
+                    device_type=slot.device_type, kind="crash",
+                    attempt=attempt,
+                    message=f"{type(e).__name__}: {e}",
+                    seconds=time.perf_counter() - t0)
+
+        if deadline is None and len(segments) == 1:
+            return [work(segments[0])]
+
+        nw = self.max_workers or max(len(segments), 1)
+        pool = cf.ThreadPoolExecutor(max_workers=nw)
+        try:
+            futs = {pool.submit(work, seg): i
+                    for i, seg in enumerate(segments)}
+            done_f, hung = cf.wait(futs, timeout=deadline)
+            outcomes: List[Union[_SlotResult, FaultRecord]] = \
+                [None] * len(segments)  # type: ignore[list-item]
+            for f in done_f:
+                outcomes[futs[f]] = f.result()
+            for f in hung:
+                seg = segments[futs[f]]
+                slot = part.slots[seg.slot]
+                f.cancel()
+                outcomes[futs[f]] = FaultRecord(
+                    slot=seg.slot, device=slot.device,
+                    device_type=slot.device_type, kind="timeout",
+                    attempt=attempt,
+                    message=f"watchdog: no completion within {deadline:.3f}s",
+                    seconds=float(deadline or 0.0))
+            return outcomes
+        finally:
+            # abandon hung threads instead of joining them (a stalled slot
+            # must not block the retry round)
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _segment_env(self, part: ConcretePartitioning, arrays: Dict[str, Any],
+                     seg: _Segment) -> Dict[str, Any]:
+        """Per-segment environment: slice every partitionable vector to the
+        segment's unit range (each with its own epu); replicate the rest."""
+        plan = part.plan
+        env: Dict[str, Any] = {}
+        for name, arr in arrays.items():
+            vp = plan.vectors.get(name)
+            if vp is None or vp.copy:
+                env[name] = arr
+                continue
+            off = seg.start * vp.epu
+            size = seg.units * vp.epu
+            idx = [slice(None)] * arr.ndim
+            idx[vp.partition_dim] = slice(off, off + size)
+            env[name] = arr[tuple(idx)]
+        witness = next((v for v in plan.vectors.values() if not v.copy), None)
+        if witness is not None:
+            env["__partition__"] = PartitionInfo(
+                size=seg.units * witness.epu,
+                offset=seg.start * witness.epu)
+        return env
 
     def last_class_times(self) -> Tuple[float, float]:
         n_a = self._last_n_a
@@ -169,27 +312,77 @@ def _produced_names(sct: SCT) -> List[str]:
 
 
 class Future:
-    """Marrow's asynchronous execution handle (paper Table 1)."""
+    """Marrow's asynchronous execution handle (paper Table 1).
 
-    def __init__(self, inner: cf.Future):
+    ``get`` re-raises executor failures as
+    :class:`~repro.core.faults.ExecutionError` with the failing slot /
+    device identity attached, instead of a bare pool exception.
+    """
+
+    def __init__(self, inner: cf.Future, deadline: Optional[float] = None):
         self._inner = inner
+        self._deadline = deadline
 
     def get(self, timeout: Optional[float] = None):
-        return self._inner.result(timeout)
+        timeout = timeout if timeout is not None else self._deadline
+        try:
+            return self._inner.result(timeout)
+        except ExecutionError:
+            raise
+        except cf.TimeoutError:
+            raise ExecutionError(
+                f"request did not complete within {timeout}s") from None
+        except Exception as e:
+            raise ExecutionError(
+                f"execution failed: {type(e).__name__}: {e}",
+                getattr(e, "records", [])) from e
 
     def done(self) -> bool:
         return self._inner.done()
 
 
 class Session:
-    """User-facing facade: SCT.run() -> Future over a Scheduler."""
+    """User-facing facade: SCT.run() -> Future over a Scheduler.
+
+    Usable as a context manager (``with Session(sched) as s: ...`` shuts
+    the request queue down on exit).  ``run`` accepts a request-level
+    ``deadline`` (seconds, enforced across retries and by ``Future.get``)
+    and ``retries`` with exponential backoff on terminal
+    :class:`~repro.core.faults.ExecutionError`.
+    """
 
     def __init__(self, scheduler):
         self.scheduler = scheduler
         self._pool = cf.ThreadPoolExecutor(max_workers=1)  # FCFS batch queue
 
-    def run(self, sct: SCT, **arrays) -> Future:
-        return Future(self._pool.submit(self.scheduler.run, sct, arrays))
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown()
+
+    def run(self, sct: SCT, *, deadline: Optional[float] = None,
+            retries: int = 0, retry_backoff: float = 0.05,
+            **arrays) -> Future:
+        def attempt_loop():
+            t0 = time.monotonic()
+            last: Optional[ExecutionError] = None
+            for k in range(retries + 1):
+                if deadline is not None and time.monotonic() - t0 > deadline:
+                    raise ExecutionError(
+                        f"request deadline {deadline}s exceeded after "
+                        f"{k} attempts",
+                        getattr(last, "records", []), k)
+                try:
+                    return self.scheduler.run(sct, arrays)
+                except ExecutionError as e:
+                    last = e
+                    if k == retries:
+                        raise
+                    time.sleep(retry_backoff * (2 ** k))
+            raise last  # pragma: no cover — loop always returns or raises
+
+        return Future(self._pool.submit(attempt_loop), deadline=deadline)
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)

@@ -183,7 +183,18 @@ class KnowledgeBase:
 
     # -- storage ------------------------------------------------------------
     def store(self, profile: Profile) -> None:
-        """Persist a profile, keeping only the best time per (SCT, workload)."""
+        """Persist a profile, keeping only the best time per (SCT, workload).
+
+        ``best_time`` must be positive (or ``inf`` for not-yet-measured
+        profiles): NaN / non-positive times — e.g. from a run that
+        suffered slot faults and was mis-reported — are rejected so fault
+        noise can never displace a genuinely measured best configuration
+        (the Scheduler additionally excludes failed runs upstream).
+        """
+        if math.isnan(profile.best_time) or profile.best_time <= 0:
+            raise ValueError(
+                f"refusing to store profile with best_time="
+                f"{profile.best_time!r} for {profile.key()}")
         k = profile.key()
         old = self._profiles.get(k)
         if old is None or profile.best_time <= old.best_time:

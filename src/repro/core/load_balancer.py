@@ -36,10 +36,27 @@ from repro.core.distribution import AdaptiveBinarySearch, Distribution
 
 @dataclasses.dataclass
 class ExecutionStats:
-    """Statistics of one monitored SCT execution (paper Sec. 3.3)."""
+    """Statistics of one monitored SCT execution (paper Sec. 3.3).
+
+    ``time_a`` / ``time_b`` are the per-class makespans (accelerator
+    class first) recorded at dispatch time so the balancer, the
+    autotuner's evaluator, and the device-health tracker all share one
+    source of truth.  ``failures`` / ``retries`` carry the fault history
+    of the run (see :mod:`repro.core.faults`): a run with failures is
+    excluded from lbt updates and KB ``best_time`` refinement so fault
+    noise cannot corrupt learned profiles.
+    """
 
     times: List[float]           # per concurrent execution
     share_a: float               # distribution in effect
+    time_a: float = 0.0          # accelerator-class makespan
+    time_b: float = 0.0          # host-class makespan
+    failures: List = dataclasses.field(default_factory=list)  # FaultRecords
+    retries: int = 0             # repartition/retry rounds consumed
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
 
     @property
     def total(self) -> float:
@@ -73,7 +90,14 @@ class LoadBalancer:
         return (deviation / self.c_factor) < self.max_dev
 
     def observe(self, stats: ExecutionStats) -> bool:
-        """Update lbt with one execution; True if balancing should kick in."""
+        """Update lbt with one execution; True if balancing should kick in.
+
+        Runs that suffered slot faults are ignored: their per-slot times
+        mix real compute with retry/repartition noise, so feeding them to
+        the detector would trigger spurious balancing operations.
+        """
+        if not stats.ok:
+            return False
         ub = 1.0 if self.is_unbalanced(stats.deviation) else 0.0
         if ub:
             self.unbalanced_runs += 1

@@ -17,6 +17,21 @@ The Scheduler receives execution requests from the Library layer and:
 The executor is pluggable — :class:`repro.core.executor.ThreadedExecutor`
 (real partitioned runs on this host) and
 :class:`repro.core.simulator.SimulatedExecutor` share the interface.
+
+Failure semantics
+-----------------
+Device failure is a first-class scheduling signal, tracked by
+:class:`~repro.core.faults.DeviceHealth`: every scheduled run records
+per-device success/failure from the executor's fault records; a device
+crossing the consecutive-failure threshold is *quarantined* — ``_slots``
+and ``_per_slot_shares`` rebuild without it, degrading gracefully to
+CPU-only or GPU-only execution — and after a probation interval it
+re-enters with a small probe share, one clean run away from full
+reinstatement.  Statistics of failed runs are *excluded* from
+``LoadBalancer.observe`` and from KB ``best_time`` refinement, so fault
+noise cannot corrupt learned profiles; a run whose retries are exhausted
+surfaces as :class:`~repro.core.faults.ExecutionError` with the per-slot
+fault history attached.
 """
 from __future__ import annotations
 
@@ -28,6 +43,7 @@ from repro.core.autotuner import TunerParams, build_profile
 from repro.core.decomposition import (ConcretePartitioning, DecompositionPlan,
                                       ExecutionSlot, build_plan)
 from repro.core.distribution import Distribution
+from repro.core.faults import DeviceHealth, ExecutionError
 from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
                                        Profile)
 from repro.core.load_balancer import ExecutionStats, LoadBalancer, class_times
@@ -52,7 +68,8 @@ class Scheduler:
                  balancer: Optional[LoadBalancer] = None,
                  allow_profile_build: bool = False,
                  tuner_params: TunerParams = TunerParams(),
-                 default_share_a: float = 0.8):
+                 default_share_a: float = 0.8,
+                 health: Optional[DeviceHealth] = None):
         self.host = host
         self.accel = accel
         self.executor = executor
@@ -61,8 +78,10 @@ class Scheduler:
         self.allow_profile_build = allow_profile_build
         self.tuner_params = tuner_params
         self.default_share_a = default_share_a
+        self.health = health if health is not None else DeviceHealth()
         self._last_key: Optional[Tuple[str, str]] = None
         self._current: Optional[Profile] = None
+        self._last_slots: List[ExecutionSlot] = []
 
     # ------------------------------------------------------------------
     def run(self, sct: SCT, arrays: Dict[str, Any],
@@ -76,18 +95,39 @@ class Scheduler:
             profile, action = self._recurrent(sct, workload)        # Fig. 4 right
         self._last_key, self._current = key, profile
 
-        outputs, stats = self._dispatch(sct, arrays, profile)
+        self.health.tick()
+        try:
+            outputs, stats = self._dispatch(sct, arrays, profile)
+        except ExecutionError as e:
+            # terminal failure: still feed the health tracker, so repeat
+            # offenders get quarantined even when no run ever completes
+            for base in {r.device_base for r in e.records}:
+                self.health.record_failure(base)
+            raise
+        self._observe_health(stats)
 
         # Monitor: update detector; persist best-known configurations.
-        trigger = self.balancer.observe(stats)
-        if not trigger:
-            self.balancer.balanced_again()
-        if stats.total < profile.best_time:
-            improved = dataclasses.replace(profile, best_time=stats.total)
-            self.kb.store(improved)
-            self._current = improved
+        # Failed runs are excluded — their times mix real compute with
+        # retry noise and would corrupt the lbt detector and KB profiles.
+        if stats.ok:
+            trigger = self.balancer.observe(stats)
+            if not trigger:
+                self.balancer.balanced_again()
+            if stats.total < profile.best_time:
+                improved = dataclasses.replace(profile, best_time=stats.total)
+                self.kb.store(improved)
+                self._current = improved
         return ScheduledRun(outputs=outputs, stats=stats,
                             profile=self._current, action=action)
+
+    def _observe_health(self, stats) -> None:
+        """Feed per-device success/failure of one run into the tracker."""
+        failed = {r.device_base for r in stats.failures}
+        participated = {s.device.split("/")[0] for s in self._last_slots}
+        for base in participated - failed:
+            self.health.record_success(base)
+        for base in failed:
+            self.health.record_failure(base)
 
     # ------------------------------------------------------------------
     def _derive(self, sct: SCT, workload: Workload) -> Tuple[Profile, str]:
@@ -139,42 +179,76 @@ class Scheduler:
         outputs, times = self.executor.execute(sct, part, arrays, profile)
         n_a = sum(1 for s in slots if s.device_type != "cpu")
         ta, tb = class_times(times, n_a)
-        stats = ExecutionStats(times=list(times), share_a=profile.share_a)
+        stats = ExecutionStats(
+            times=list(times), share_a=profile.share_a, time_a=ta, time_b=tb,
+            failures=list(getattr(self.executor, "last_failures", [])),
+            retries=int(getattr(self.executor, "last_retries", 0)))
+        self._last_slots = list(slots)
         return outputs, stats
 
+    def _usable_accel_devices(self):
+        return [d for d in self.accel.devices if self.health.usable(d.name)]
+
     def _slots(self, profile: Profile) -> List[ExecutionSlot]:
-        """Accelerator slots first (class a), then host fission slots."""
+        """Accelerator slots first (class a), then host fission slots.
+
+        Quarantined devices are excluded — the run degrades gracefully to
+        CPU-only or GPU-only; a device due for probation re-enters here
+        (with a probe-sized share, see :meth:`_per_slot_shares`).
+        """
         self.host.configure(profile.config.fission_level)
         self.accel.configure(profile.config.overlap)
         slots: List[ExecutionSlot] = []
-        for d in self.accel.devices:
+        for d in self._usable_accel_devices():
             for o in range(self.accel.overlap):
                 slots.append(ExecutionSlot(device=f"{d.name}/q{o}",
                                            device_type=d.kind,
                                            wgs=dict(profile.config.wgs)))
-        for i in range(self.host.parallelism):
-            slots.append(ExecutionSlot(device=f"{self.host.device.name}/f{i}",
-                                       device_type="cpu",
-                                       wgs=dict(profile.config.wgs)))
+        if self.health.usable(self.host.device.name):
+            for i in range(self.host.parallelism):
+                slots.append(ExecutionSlot(
+                    device=f"{self.host.device.name}/f{i}",
+                    device_type="cpu", wgs=dict(profile.config.wgs)))
+        if not slots:
+            raise ExecutionError(
+                "all devices quarantined: no execution slots available "
+                f"(quarantined: {sorted(self.health.quarantined())})")
         return slots
 
     def _per_slot_shares(self, profile: Profile,
                          slots: Sequence[ExecutionSlot]) -> List[float]:
         n_a = sum(1 for s in slots if s.device_type != "cpu")
         n_b = len(slots) - n_a
-        ratios_a = self.accel.calibrate()
-        dist = Distribution(a=profile.share_a if n_b else 1.0,
-                            b=(1 - profile.share_a) if n_b else 0.0)
+        accel_devs = self._usable_accel_devices()
+        # restrict calibration scores to the devices actually in the slots
+        by_name = dict(zip((d.name for d in self.accel.devices),
+                           self.accel.calibrate()))
+        ratios_a = [by_name[d.name] for d in accel_devs]
+        tot_r = sum(ratios_a)
+        if tot_r > 0:
+            ratios_a = [r / tot_r for r in ratios_a]
+        if not n_a:
+            dist = Distribution(a=0.0, b=1.0)       # degraded: CPU-only
+        elif not n_b:
+            dist = Distribution(a=1.0, b=0.0)       # degraded: GPU-only
+        else:
+            dist = Distribution(a=profile.share_a, b=1 - profile.share_a)
         shares: List[float] = []
         if n_a:
             per_dev = [dist.a * r for r in ratios_a]     # static intra-class
+            for i, d in enumerate(accel_devs):
+                if self.health.is_probing(d.name):       # probation: tiny share
+                    per_dev[i] = min(per_dev[i], self.health.probe_share)
             per_queue = []
             for r in per_dev:
                 per_queue.extend([r / self.accel.overlap] * self.accel.overlap)
             shares.extend(per_queue)
         if n_b:
-            shares.extend([dist.b / n_b] * n_b)
-        # normalise tiny float drift
+            b = dist.b / n_b
+            if self.health.is_probing(self.host.device.name):
+                b = min(b, self.health.probe_share / n_b)
+            shares.extend([b] * n_b)
+        # normalise tiny float drift (and probe-share rescaling)
         t = sum(shares)
         return [s / t for s in shares]
 
@@ -186,10 +260,9 @@ class Scheduler:
                         origin=Origin.BUILT)
             arrays = self.executor.synthesise_arrays(sct, workload)
             _, stats = self._dispatch(sct, arrays, p)
-            slots = self._slots(p)
-            n_a = sum(1 for s in slots if s.device_type != "cpu")
-            ta, tb = class_times(stats.times, n_a)
-            return stats.total, ta, tb
+            # per-class makespans recorded at dispatch time — one source
+            # of truth shared with the balancer and the health tracker
+            return stats.total, stats.time_a, stats.time_b
         return evaluate
 
 

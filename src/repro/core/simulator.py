@@ -20,6 +20,16 @@ interface, with a cost model calibrated to the paper's hardware ratios:
 Determinism: multiplicative noise from a seeded Generator; experiments are
 reproducible bit-for-bit.  The same model doubles as the *straggler* model
 for TPU slices (a slice whose throughput drifts == a loaded CPU).
+
+Failure semantics: the simulator honours the same
+:class:`~repro.core.faults.FaultInjector` and retry ladder as the real
+:class:`~repro.core.executor.ThreadedExecutor` — injected crashes kill a
+slot halfway through its simulated run, injected stalls add
+``stall_seconds`` (tripping the watchdog deadline when one is derivable
+from ``profile.best_time``), lost unit ranges are re-split across the
+surviving slots, and exhausted retries raise
+:class:`~repro.core.faults.ExecutionError` — so pod-scale failure and
+straggler policies are testable deterministically without hardware.
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.decomposition import ConcretePartitioning
+from repro.core.faults import (ExecutionError, FaultInjector, FaultPolicy,
+                               FaultRecord, split_units)
 from repro.core.knowledge_base import Profile
 from repro.core.skeletons import SCT
 from repro.core.spec import Transfer, Workload
@@ -86,16 +98,22 @@ class SimulatedExecutor:
 
     def __init__(self, devices: Sequence[SimDevice], *, seed: int = 0,
                  noise: float = 0.02, compute_outputs: bool = False,
-                 cost: Optional[CostModel] = None):
+                 cost: Optional[CostModel] = None,
+                 injector: Optional[FaultInjector] = None,
+                 policy: FaultPolicy = FaultPolicy()):
         self.devices = {d.name.split("/")[0]: d for d in devices}
         self.noise = noise
         self.rng = np.random.default_rng(seed)
         self.compute_outputs = compute_outputs
         self.cpu_load = 0.0              # external load factor (Fig. 11)
         self.cost_override = cost
+        self.injector = injector
+        self.policy = policy
         self._last_times: List[float] = []
         self._last_n_a = 0
         self.executions = 0
+        self.last_failures: List[FaultRecord] = []
+        self.last_retries = 0
 
     # -- knobs -------------------------------------------------------------
     def set_cpu_load(self, load: float) -> None:
@@ -110,13 +128,68 @@ class SimulatedExecutor:
         cost = self.cost_override or CostModel.of(sct, workload)
         level = profile.config.fission_level
         overlap = max(profile.config.overlap, 1)
-        times: List[float] = []
         cpu_slots = [s for s in part.slots if s.device_type == "cpu"]
-        for slot, units in zip(part.slots, part.units):
-            dev = self._device_for(slot.device)
-            t = self._slot_time(dev, units, cost, level, overlap,
-                                n_cpu_slots=max(len(cpu_slots), 1))
-            times.append(t)
+        n_cpu = max(len(cpu_slots), 1)
+        deadline = self.policy.deadline(getattr(profile, "best_time", None))
+
+        times = [0.0] * len(part.slots)
+        records: List[FaultRecord] = []
+        retries = 0
+        dead: set = set()
+        pending: Dict[int, int] = {j: u for j, u in enumerate(part.units)}
+        for attempt in range(self.policy.max_attempts):
+            failed: Dict[int, int] = {}
+            for j, units in pending.items():
+                slot = part.slots[j]
+                dev = self._device_for(slot.device)
+                t = self._slot_time(dev, units, cost, level, overlap,
+                                    n_cpu_slots=n_cpu)
+                kind = (self.injector.decide(slot.device)
+                        if self.injector is not None else None)
+                if kind == "stall":
+                    t += self.injector.stall_seconds
+                    if deadline is not None and t > deadline:
+                        records.append(FaultRecord(
+                            slot=j, device=slot.device,
+                            device_type=slot.device_type, kind="timeout",
+                            attempt=attempt,
+                            message="simulated stall tripped watchdog "
+                                    f"({deadline:.3f}s)",
+                            seconds=deadline))
+                        dead.add(j)
+                        failed[j] = units
+                        times[j] += deadline
+                        continue
+                if kind == "crash":
+                    # the slot dies halfway through its simulated run
+                    records.append(FaultRecord(
+                        slot=j, device=slot.device,
+                        device_type=slot.device_type, kind="crash",
+                        attempt=attempt, message="injected crash",
+                        seconds=t * 0.5))
+                    dead.add(j)
+                    failed[j] = units
+                    times[j] += t * 0.5
+                    continue
+                times[j] += t
+            lost_units = sum(u for u in failed.values() if u > 0)
+            if not lost_units:
+                break
+            alive = [j for j in range(len(part.slots)) if j not in dead]
+            if not alive:
+                raise ExecutionError(
+                    "partition lost: no surviving execution slot can adopt "
+                    f"{lost_units} domain units", records, attempt + 1)
+            if attempt == self.policy.max_attempts - 1:
+                raise ExecutionError(
+                    f"retries exhausted after {self.policy.max_attempts} "
+                    "attempts", records, attempt + 1)
+            counts = split_units(lost_units, len(alive))
+            pending = {j: u for j, u in zip(alive, counts) if u}
+            retries += 1
+
+        self.last_failures = records
+        self.last_retries = retries
         self._last_times = times
         self._last_n_a = sum(1 for s in part.slots if s.device_type != "cpu")
         self.executions += 1

@@ -149,6 +149,15 @@ MergeFn = Callable[[Sequence[Any]], Any]
 
 #: Predefined merging functions (paper Sec. 3.4): addition, subtraction,
 #: multiplication and division over the partial results of partitions.
+#:
+#: Fault-tolerance note: under repartition-retry (repro.core.faults) a
+#: failed partition's partial result is replaced by *several* partial
+#: results from the sub-ranges adopted by surviving slots, so a MergeFn
+#: must tolerate a variable number of parts.  ADD/MUL are fully safe
+#: (associative + commutative); the left-fold SUB/DIV semantics
+#: ``p0 - p1 - ... = p0 - (p1 + ...)`` survive re-splits of any
+#: partition except the first — custom non-associative merges should be
+#: paired with ``FaultPolicy(max_attempts=1)``.
 MERGE_ADD: MergeFn = lambda parts: _fold(parts, lambda a, b: a + b)
 MERGE_SUB: MergeFn = lambda parts: _fold(parts, lambda a, b: a - b)
 MERGE_MUL: MergeFn = lambda parts: _fold(parts, lambda a, b: a * b)

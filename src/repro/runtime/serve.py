@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import ExecutionError
 from repro.models.config import ModelConfig
 from repro.models.lm import Cache, decode_step, init_cache, prefill
 
@@ -105,8 +106,16 @@ class ServeEngine:
         if not any(r is not None for r in self.active):
             return 0
         self.key, sub = jax.random.split(self.key)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.cur_token, self.pos)
+        try:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self.cur_token, self.pos)
+        except Exception as e:
+            # surface the failure with the affected request identities
+            # (same terminal taxonomy as the executor, repro.core.faults)
+            rids = [r.rid for r in self.active if r is not None]
+            raise ExecutionError(
+                f"decode step failed for requests {rids}: "
+                f"{type(e).__name__}: {e}") from e
         nxt = sample(logits, sub, self.temperature)
         self.cur_token = nxt
         self.pos = self.pos + 1

@@ -1,0 +1,347 @@
+"""Fault-tolerant execution: slot containment, repartition-retry, the
+watchdog, device quarantine/reinstatement, and fault-noise isolation
+(repro.core.faults + hooks in executor/simulator/scheduler)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorPlatform, DeviceInfo, DeviceHealth,
+                        ExecutionError, ExecutionSlot, ExecutionStats,
+                        FaultInjector, FaultPolicy, FaultRecord, HostPlatform,
+                        KnowledgeBase, LoadBalancer, PlatformConfig, Profile,
+                        Scheduler, Session, ThreadedExecutor, build_plan,
+                        kernel, scalar, vector)
+from repro.core.load_balancer import class_times
+from repro.core.simulator import SimDevice, SimulatedExecutor
+from repro.core.spec import Workload
+
+
+def saxpy_tree():
+    return kernel(lambda a, x, y: a * x + y, name="saxpy",
+                  inputs=[scalar("a"), vector("x"), vector("y")],
+                  outputs=[vector("z")])
+
+
+def saxpy_arrays(n=64, a=2.0):
+    return {"a": np.float32(a),
+            "x": np.arange(n, dtype=np.float32),
+            "y": np.ones(n, dtype=np.float32)}
+
+
+def make_profile(sct, n=64, share=0.5):
+    return Profile(sct_id=sct.unique_id(), workload=Workload((n,)),
+                   share_a=share, config=PlatformConfig(),
+                   best_time=math.inf)
+
+
+def three_slot_part(sct, n=64):
+    plan = build_plan(sct, {"x": (n,), "y": (n,)})
+    slots = [ExecutionSlot("gpu0/q0", "gpu"),
+             ExecutionSlot("cpu0/f0", "cpu"),
+             ExecutionSlot("cpu0/f1", "cpu")]
+    return plan.partition(slots, [0.5, 0.25, 0.25])
+
+
+def make_scheduler(executor, **kw):
+    host = HostPlatform(DeviceInfo("cpu0", "cpu", compute_units=4),
+                        topology={"L2": 2, "NO_FISSION": 1})
+    accel = AcceleratorPlatform([DeviceInfo("gpu0", "gpu")], max_overlap=2)
+    return Scheduler(host=host, accel=accel, executor=executor,
+                     kb=KnowledgeBase(), **kw)
+
+
+def sim_devices():
+    return [SimDevice("gpu0", "gpu", flops=1e12),
+            SimDevice("cpu0", "cpu", flops=1e11, cores=4)]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism
+# ---------------------------------------------------------------------------
+
+class TestInjector:
+    def test_seeded_sequence_is_deterministic(self):
+        def drive(inj):
+            return [inj.decide(d) for d in
+                    ["gpu0/q0", "cpu0/f0", "gpu0/q0", "cpu0/f1"] * 10]
+        a = FaultInjector(seed=42, crash_prob=0.3, stall_prob=0.2)
+        b = FaultInjector(seed=42, crash_prob=0.3, stall_prob=0.2)
+        assert drive(a) == drive(b)
+        assert a.injected == b.injected
+        assert any(k == "crash" for k, _, _ in a.injected)
+
+    def test_nth_call_trigger_counts_per_device(self):
+        inj = FaultInjector(crash_on_call={"gpu0": [2]})
+        assert inj.decide("gpu0/q0") is None       # call 1
+        assert inj.decide("cpu0/f0") is None       # other device
+        assert inj.decide("gpu0/q1") == "crash"    # call 2 (same base dev)
+        assert inj.decide("gpu0/q0") is None       # call 3
+
+    def test_per_device_probability_override(self):
+        inj = FaultInjector(seed=0, device_crash_prob={"gpu0": 1.0})
+        assert inj.decide("gpu0/q0") == "crash"
+        assert inj.decide("cpu0/f0") is None
+
+
+# ---------------------------------------------------------------------------
+# ThreadedExecutor: containment, repartition-retry, watchdog
+# ---------------------------------------------------------------------------
+
+class TestThreadedExecutorFaults:
+    def test_crash_repartitions_and_matches_reference(self):
+        sct = saxpy_tree()
+        arrays = saxpy_arrays()
+        ref = ThreadedExecutor().execute(
+            sct, three_slot_part(sct), arrays, make_profile(sct))[0]
+
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        ex = ThreadedExecutor(injector=inj)
+        out, times = ex.execute(sct, three_slot_part(sct), arrays,
+                                make_profile(sct))
+        np.testing.assert_array_equal(out["z"], ref["z"])
+        assert ex.last_retries == 1
+        assert len(ex.last_failures) == 1
+        rec = ex.last_failures[0]
+        assert rec.device_base == "gpu0" and rec.kind == "crash"
+        assert len(times) == 3                     # one entry per slot
+
+    def test_user_kernel_exception_is_contained(self):
+        boom = kernel(lambda x: (_ for _ in ()).throw(ValueError("boom")),
+                      name="boom", inputs=[vector("x")],
+                      outputs=[vector("y")])
+        plan = build_plan(boom, {"x": (8,)})
+        part = plan.partition([ExecutionSlot("cpu0/f0", "cpu"),
+                               ExecutionSlot("cpu0/f1", "cpu")], [0.5, 0.5])
+        ex = ThreadedExecutor()
+        with pytest.raises(ExecutionError) as ei:
+            ex.execute(boom, part, {"x": np.ones(8, np.float32)},
+                       make_profile(boom, 8))
+        assert "ValueError: boom" in str(ei.value)
+        assert all(r.kind == "crash" for r in ei.value.records)
+
+    def test_exhausted_retries_raises_with_records(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_on_call={"gpu0": [1], "cpu0": [3]})
+        ex = ThreadedExecutor(injector=inj, policy=FaultPolicy(max_attempts=2))
+        with pytest.raises(ExecutionError, match="retries exhausted") as ei:
+            ex.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                       make_profile(sct))
+        kinds = [(r.device_base, r.kind) for r in ei.value.records]
+        assert ("gpu0", "crash") in kinds and ("cpu0", "crash") in kinds
+        assert ei.value.attempts == 2
+
+    def test_all_slots_dead_is_partition_lost(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        ex = ThreadedExecutor(injector=inj)
+        with pytest.raises(ExecutionError, match="partition lost"):
+            ex.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                       make_profile(sct))
+
+    def test_watchdog_fires_on_stalled_slot(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(stall_on_call={"gpu0": [1]}, stall_seconds=5.0)
+        ex = ThreadedExecutor(
+            injector=inj,
+            policy=FaultPolicy(max_attempts=2, default_deadline=0.3))
+        out, _ = ex.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                            make_profile(sct))
+        assert ex.last_failures and ex.last_failures[0].kind == "timeout"
+        assert ex.last_retries == 1
+        x = saxpy_arrays()["x"]
+        np.testing.assert_array_equal(out["z"], 2.0 * x + 1.0)
+
+    def test_deadline_derived_from_best_time(self):
+        p = FaultPolicy(watchdog_multiple=8.0, min_deadline=0.25)
+        assert p.deadline(1.0) == 8.0
+        assert p.deadline(0.001) == 0.25           # floored
+        assert p.deadline(math.inf) is None        # unknown -> default (None)
+        assert FaultPolicy(default_deadline=2.0).deadline(math.inf) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# SimulatedExecutor honours the same injector/policy
+# ---------------------------------------------------------------------------
+
+class TestSimulatedExecutorFaults:
+    def test_sim_crash_retries_deterministically(self):
+        sct = saxpy_tree()
+
+        def run():
+            inj = FaultInjector(crash_on_call={"gpu0": [1]})
+            sim = SimulatedExecutor(sim_devices(), seed=3, injector=inj)
+            _, times = sim.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                                   make_profile(sct))
+            return times, sim.last_retries, [r.kind for r in sim.last_failures]
+
+        t1, r1, k1 = run()
+        t2, r2, k2 = run()
+        assert t1 == t2 and r1 == r2 == 1 and k1 == k2 == ["crash"]
+
+    def test_sim_stall_trips_watchdog(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(stall_on_call={"gpu0": [1]}, stall_seconds=10.0)
+        sim = SimulatedExecutor(
+            sim_devices(), injector=inj,
+            policy=FaultPolicy(default_deadline=1.0))
+        _, times = sim.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                               make_profile(sct))
+        assert sim.last_failures[0].kind == "timeout"
+        assert times[0] == pytest.approx(1.0)      # charged the deadline
+
+    def test_sim_total_loss_raises(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sim = SimulatedExecutor(sim_devices(), injector=inj)
+        with pytest.raises(ExecutionError):
+            sim.execute(sct, three_slot_part(sct), saxpy_arrays(),
+                        make_profile(sct))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: end-to-end recovery, quarantine, reinstatement, noise isolation
+# ---------------------------------------------------------------------------
+
+class TestSchedulerFaultTolerance:
+    def test_scheduled_run_survives_accelerator_loss(self):
+        """Acceptance: seeded injector kills one accelerator slot; the run
+        completes with outputs matching the fault-free reference and
+        reports retries >= 1."""
+        sct = saxpy_tree()
+        arrays = saxpy_arrays()
+        ref = make_scheduler(ThreadedExecutor()).run(sct, dict(arrays))
+
+        inj = FaultInjector(seed=7, crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(ThreadedExecutor(injector=inj))
+        run = sched.run(sct, dict(arrays))
+        np.testing.assert_array_equal(run.outputs["z"], ref.outputs["z"])
+        assert run.stats.retries >= 1
+        assert not run.stats.ok
+        assert run.stats.failures[0].device_base == "gpu0"
+
+    def test_quarantine_then_probation_then_reinstatement(self):
+        sct = saxpy_tree()
+        arrays = saxpy_arrays()
+        inj = FaultInjector(crash_on_call={"gpu0": [1, 2]})
+        sched = make_scheduler(
+            SimulatedExecutor(sim_devices(), injector=inj),
+            health=DeviceHealth(quarantine_after=2, probe_after=2))
+
+        r1 = sched.run(sct, dict(arrays))          # gpu0 fault #1
+        assert not r1.stats.ok
+        assert not sched.health.is_quarantined("gpu0")
+
+        r2 = sched.run(sct, dict(arrays))          # gpu0 fault #2 -> out
+        assert not r2.stats.ok
+        assert sched.health.is_quarantined("gpu0")
+
+        r3 = sched.run(sct, dict(arrays))          # degraded: CPU-only
+        assert r3.stats.ok
+        assert all(not s.device.startswith("gpu0")
+                   for s in sched._last_slots)
+
+        r4 = sched.run(sct, dict(arrays))          # probe run: gpu0 back
+        assert any(s.device.startswith("gpu0") for s in sched._last_slots)
+        assert r4.stats.ok
+        assert not sched.health.is_quarantined("gpu0")   # reinstated
+
+        r5 = sched.run(sct, dict(arrays))          # fully back
+        assert any(s.device.startswith("gpu0") for s in sched._last_slots)
+
+    def test_all_devices_quarantined_is_terminal(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(
+            SimulatedExecutor(sim_devices(), injector=inj,
+                              policy=FaultPolicy(max_attempts=1)),
+            health=DeviceHealth(quarantine_after=1, probe_after=100))
+        with pytest.raises(ExecutionError):
+            sched.run(sct, saxpy_arrays())         # run fails, all devs out
+        with pytest.raises(ExecutionError, match="quarantined"):
+            sched.run(sct, saxpy_arrays())         # no slots left at all
+
+    def test_failed_runs_do_not_feed_balancer_or_kb(self):
+        sct = saxpy_tree()
+        arrays = saxpy_arrays()
+        inj = FaultInjector(crash_on_call={"gpu0": [1, 2, 3]})
+        sched = make_scheduler(
+            SimulatedExecutor(sim_devices(), injector=inj),
+            health=DeviceHealth(quarantine_after=99))
+        for _ in range(3):
+            run = sched.run(sct, dict(arrays))
+            assert not run.stats.ok
+        assert sched.balancer.lbt == 0.0
+        assert sched.balancer.unbalanced_runs == 0
+        stored = sched.kb.exact(sct.unique_id(), Workload((64,)))
+        assert stored is not None and stored.best_time == math.inf
+
+    def test_per_class_makespans_recorded_on_stats(self):
+        sct = saxpy_tree()
+        sched = make_scheduler(SimulatedExecutor(sim_devices()))
+        run = sched.run(sct, saxpy_arrays())
+        n_a = sum(1 for s in sched._last_slots if s.device_type != "cpu")
+        ta, tb = class_times(run.stats.times, n_a)
+        assert run.stats.time_a == ta and run.stats.time_b == tb
+        assert run.stats.time_a > 0 and run.stats.time_b > 0
+
+
+class TestBalancerFaultIsolation:
+    def test_observe_ignores_failed_stats(self):
+        lb = LoadBalancer()
+        rec = FaultRecord(slot=0, device="gpu0/q0", device_type="gpu",
+                          kind="crash", attempt=0)
+        bad = ExecutionStats(times=[1.0, 0.1], share_a=0.5, failures=[rec])
+        for _ in range(10):
+            assert not lb.observe(bad)
+        assert lb.lbt == 0.0
+        # the same (unbalanced) times without failures do trigger
+        good = ExecutionStats(times=[1.0, 0.1], share_a=0.5)
+        assert any(lb.observe(good) for _ in range(5))
+
+    def test_kb_rejects_corrupt_best_time(self):
+        kb = KnowledgeBase()
+        p = Profile(sct_id="s", workload=Workload((8,)), share_a=0.5,
+                    config=PlatformConfig(), best_time=float("nan"))
+        with pytest.raises(ValueError):
+            kb.store(p)
+
+
+# ---------------------------------------------------------------------------
+# Session / Future: context manager, request retry, identity-rich errors
+# ---------------------------------------------------------------------------
+
+class TestSessionFaults:
+    def test_context_manager_and_retry_recovers(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(
+            ThreadedExecutor(injector=inj,
+                             policy=FaultPolicy(max_attempts=1)))
+        with Session(sched) as sess:
+            fut = sess.run(sct, retries=2, **saxpy_arrays())
+            out = fut.get(timeout=60)
+        x = saxpy_arrays()["x"]
+        np.testing.assert_array_equal(out.outputs["z"], 2.0 * x + 1.0)
+
+    def test_future_reraises_with_device_identity(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(ThreadedExecutor(injector=inj))
+        with Session(sched) as sess:
+            fut = sess.run(sct, **saxpy_arrays())
+            with pytest.raises(ExecutionError) as ei:
+                fut.get(timeout=60)
+        assert "gpu0" in str(ei.value) or "cpu0" in str(ei.value)
+        assert ei.value.records
+
+    def test_request_deadline(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(stall_on_call={"cpu0": [1]}, stall_seconds=2.0)
+        sched = make_scheduler(
+            ThreadedExecutor(injector=inj, policy=FaultPolicy(
+                max_attempts=1, default_deadline=None)))
+        with Session(sched) as sess:
+            fut = sess.run(sct, deadline=0.4, **saxpy_arrays())
+            with pytest.raises(ExecutionError, match="did not complete"):
+                fut.get()
