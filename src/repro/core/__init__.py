@@ -20,7 +20,8 @@ from repro.core.decomposition import (ConcretePartitioning, DecompositionError,
 from repro.core.distribution import (AdaptiveBinarySearch, Distribution,
                                      WorkloadDistributionGenerator,
                                      balance_until_stable, run_binary_search)
-from repro.core.executor import Future, Session, ThreadedExecutor
+from repro.core.executor import (Future, ResidentPartition, Session,
+                                 ThreadedExecutor)
 from repro.core.faults import (DeviceHealth, ExecutionError, FaultInjector,
                                FaultPolicy, FaultRecord, PartitionLost,
                                SlotFailure, SlotTimeout)
@@ -29,7 +30,8 @@ from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
 from repro.core.load_balancer import ExecutionStats, LoadBalancer
 from repro.core.platforms import (AcceleratorPlatform, DeviceInfo,
                                   FISSION_LEVELS, HostPlatform)
-from repro.core.scheduler import ScheduledRun, Scheduler, infer_workload
+from repro.core.scheduler import (PlanCache, ScheduledRun, Scheduler,
+                                  infer_workload)
 from repro.core.simulator import CostModel, SimDevice, SimulatedExecutor
 from repro.core.skeletons import (SCT, KernelNode, Loop, LoopState, Map,
                                   MapReduce, Pipeline, kernel)

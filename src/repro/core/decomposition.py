@@ -206,6 +206,27 @@ class ConcretePartitioning:
         U = max(1, self.plan.domain_units)
         return [u / U for u in self.units]
 
+    def layout(self) -> Tuple[Tuple[int, int], ...]:
+        """Planned ``(start, units)`` domain range per slot, in order.
+
+        This is the canonical segment layout of a fault-free run; the
+        executor compares it against a :class:`ResidentPartition`'s
+        realised layout to decide whether slot-local outputs can be
+        handed straight to the next SCT (zero-copy chaining) or must be
+        merged first.
+        """
+        out: List[Tuple[int, int]] = []
+        acc = 0
+        for u in self.units:
+            out.append((acc, u))
+            acc += u
+        return tuple(out)
+
+    def same_layout(self, other: "ConcretePartitioning") -> bool:
+        """True when both partitionings tile the same domain identically."""
+        return (self.plan.domain_units == other.plan.domain_units
+                and list(self.units) == list(other.units))
+
 
 def build_plan(sct: SCT, shapes: Dict[str, Tuple[int, ...]]) -> DecompositionPlan:
     """Derive the locality-aware decomposition plan for an SCT.

@@ -251,6 +251,7 @@ class DeviceHealth:
         self.probe_after = probe_after
         self.probe_share = probe_share
         self.runs = 0                   # scheduled-run clock
+        self.version = 0                # bumped on quarantine/reinstatement
         self._entries: Dict[str, _HealthEntry] = {}
 
     def _entry(self, device: str) -> _HealthEntry:
@@ -267,6 +268,8 @@ class DeviceHealth:
         e.consecutive_failures += 1
         e.total_failures += 1
         if e.consecutive_failures >= self.quarantine_after:
+            if e.quarantined_at < 0:
+                self.version += 1       # slot set changed: plans go stale
             e.quarantined_at = self.runs
             return True
         return False
@@ -275,6 +278,8 @@ class DeviceHealth:
         e = self._entry(device)
         e.consecutive_failures = 0
         e.total_successes += 1
+        if e.quarantined_at >= 0:
+            self.version += 1           # reinstatement: slot set changed
         e.quarantined_at = -1           # clean probe run -> reinstated
 
     # -- queries -------------------------------------------------------------

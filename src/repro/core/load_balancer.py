@@ -45,6 +45,17 @@ class ExecutionStats:
     of the run (see :mod:`repro.core.faults`): a run with failures is
     excluded from lbt updates and KB ``best_time`` refinement so fault
     noise cannot corrupt learned profiles.
+
+    The per-phase breakdown decomposes one scheduled run's wall time:
+    ``plan_seconds`` (decomposition-plan derivation + partitioning, or a
+    plan-cache lookup), ``pool_seconds`` (worker-pool acquisition; ~0
+    when the persistent pool is reused), ``dispatch_seconds`` (segment
+    setup and task launch), ``compute_seconds`` (the concurrent kernel
+    attempts) and ``merge_seconds`` (result assembly).  ``merge_bytes``
+    counts bytes copied at merge time — 0 on the resident-chain path and
+    whenever every partitionable output was written in place by its
+    slot.  ``plan_cache_hit`` / ``resident`` flag which fast paths the
+    run took.
     """
 
     times: List[float]           # per concurrent execution
@@ -53,6 +64,14 @@ class ExecutionStats:
     time_b: float = 0.0          # host-class makespan
     failures: List = dataclasses.field(default_factory=list)  # FaultRecords
     retries: int = 0             # repartition/retry rounds consumed
+    plan_seconds: float = 0.0    # plan build/partition (or cache lookup)
+    pool_seconds: float = 0.0    # worker-pool creation/acquisition
+    dispatch_seconds: float = 0.0  # segment setup + task launch
+    compute_seconds: float = 0.0   # concurrent kernel execution (wall)
+    merge_seconds: float = 0.0   # result assembly
+    merge_bytes: int = 0         # bytes copied during merge (0 = zero-copy)
+    plan_cache_hit: bool = False  # partitioning served from the plan cache
+    resident: bool = False       # outputs left slot-resident (merge skipped)
 
     @property
     def ok(self) -> bool:
@@ -61,6 +80,12 @@ class ExecutionStats:
     @property
     def total(self) -> float:
         return max(self.times) if self.times else 0.0
+
+    @property
+    def overhead_seconds(self) -> float:
+        """Non-compute dispatch overhead: plan + pool + dispatch + merge."""
+        return (self.plan_seconds + self.pool_seconds
+                + self.dispatch_seconds + self.merge_seconds)
 
     @property
     def deviation(self) -> float:

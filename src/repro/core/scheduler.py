@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.autotuner import TunerParams, build_profile
@@ -62,6 +63,99 @@ class ScheduledRun:
     action: str                  # "exact" | "derived" | "built" | "adjusted" | "reused"
 
 
+class PlanCache:
+    """Plan / partitioning cache for recurrent dispatches.
+
+    Two levels, mirroring the two costs on the dispatch path:
+
+      * decomposition plans, keyed by ``(sct_id, input shapes)`` — the
+        expensive ``build_plan`` constraint derivation;
+      * concrete partitionings, keyed by the full
+        ``(sct_id, input shapes, slot signature, shares)`` tuple — the
+        quantised largest-remainder allocation.
+
+    The slot signature covers device identity, class and per-kernel wgs,
+    and the share vector is part of the key, so any slot-set or
+    distribution change self-invalidates by missing.  ``invalidate`` is
+    additionally called *explicitly* by the Scheduler whenever the
+    device-health version moves (quarantine / probation / reinstatement)
+    or a run adjusts the distribution (``adjusted`` / ``built``
+    actions), so stale entries are dropped rather than merely bypassed.
+    """
+
+    def __init__(self, *, enabled: bool = True, capacity: int = 64):
+        self.enabled = enabled
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        self._plans: Dict[Tuple, DecompositionPlan] = {}
+        self._parts: Dict[Tuple, ConcretePartitioning] = {}
+
+    # -- key components -----------------------------------------------------
+    @staticmethod
+    def shapes_sig(shapes: Dict[str, Tuple[int, ...]]) -> Tuple:
+        return tuple(sorted((k, tuple(int(d) for d in v))
+                            for k, v in shapes.items()))
+
+    @staticmethod
+    def slot_sig(slots: Sequence[ExecutionSlot]) -> Tuple:
+        return tuple((s.device, s.device_type, tuple(sorted(s.wgs.items())))
+                     for s in slots)
+
+    @staticmethod
+    def share_sig(shares: Sequence[float]) -> Tuple:
+        return tuple(round(float(s), 12) for s in shares)
+
+    # -- cache operations ----------------------------------------------------
+    def partition(self, sct: SCT, shapes: Dict[str, Tuple[int, ...]],
+                  slots: Sequence[ExecutionSlot], shares: Sequence[float]
+                  ) -> Tuple[ConcretePartitioning, bool]:
+        """Cached equivalent of ``build_plan(...).partition(...)``.
+
+        Returns ``(partitioning, hit)``; with caching disabled this is
+        exactly the uncached dispatch path.
+        """
+        if not self.enabled:
+            return build_plan(sct, shapes).partition(slots, shares), False
+        key = (sct.unique_id(), self.shapes_sig(shapes),
+               self.slot_sig(slots), self.share_sig(shares))
+        part = self._parts.get(key)
+        if part is not None:
+            self.hits += 1
+            return part, True
+        self.misses += 1
+        pkey = key[:2]
+        plan = self._plans.get(pkey)
+        if plan is None:
+            plan = build_plan(sct, shapes)
+            self._put(self._plans, pkey, plan)
+        part = plan.partition(slots, shares)
+        self._put(self._parts, key, part)
+        return part, False
+
+    def _put(self, store: Dict, key: Tuple, value) -> None:
+        if len(store) >= self.capacity:        # FIFO bound: drop the oldest
+            store.pop(next(iter(store)))
+        store[key] = value
+
+    def invalidate(self, reason: str = "") -> None:
+        """Drop every cached plan/partitioning (slot set or shares moved)."""
+        self.invalidations += 1
+        self._plans.clear()
+        self._parts.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def counters(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "invalidations": self.invalidations,
+                "hit_rate": self.hit_rate}
+
+
 class Scheduler:
     def __init__(self, *, host: HostPlatform, accel: AcceleratorPlatform,
                  executor, kb: Optional[KnowledgeBase] = None,
@@ -69,7 +163,8 @@ class Scheduler:
                  allow_profile_build: bool = False,
                  tuner_params: TunerParams = TunerParams(),
                  default_share_a: float = 0.8,
-                 health: Optional[DeviceHealth] = None):
+                 health: Optional[DeviceHealth] = None,
+                 plan_cache: bool = True):
         self.host = host
         self.accel = accel
         self.executor = executor
@@ -79,14 +174,18 @@ class Scheduler:
         self.tuner_params = tuner_params
         self.default_share_a = default_share_a
         self.health = health if health is not None else DeviceHealth()
+        self.plan_cache = PlanCache(enabled=plan_cache)
+        self._health_seen = self.health.version
         self._last_key: Optional[Tuple[str, str]] = None
         self._current: Optional[Profile] = None
         self._last_slots: List[ExecutionSlot] = []
 
     # ------------------------------------------------------------------
     def run(self, sct: SCT, arrays: Dict[str, Any],
-            workload: Optional[Workload] = None) -> ScheduledRun:
-        workload = workload or infer_workload(sct, arrays)
+            workload: Optional[Workload] = None, *,
+            _resident=None, _keep_resident: bool = False) -> ScheduledRun:
+        shapes = _resident.shapes() if _resident is not None else None
+        workload = workload or infer_workload(sct, arrays, shapes=shapes)
         key = (sct.unique_id(), workload.key())
 
         if key != self._last_key or self._current is None:
@@ -95,9 +194,20 @@ class Scheduler:
             profile, action = self._recurrent(sct, workload)        # Fig. 4 right
         self._last_key, self._current = key, profile
 
+        # explicit plan-cache invalidation: distribution adjusted, profile
+        # rebuilt, or the device-health state (quarantine / probation /
+        # reinstatement) moved since the cache entries were created
+        if action in ("adjusted", "built"):
+            self.plan_cache.invalidate("share adjustment")
+        if self.health.version != self._health_seen:
+            self.plan_cache.invalidate("device-health change")
+            self._health_seen = self.health.version
+
         self.health.tick()
         try:
-            outputs, stats = self._dispatch(sct, arrays, profile)
+            outputs, stats = self._dispatch(sct, arrays, profile,
+                                            resident=_resident,
+                                            keep_resident=_keep_resident)
         except ExecutionError as e:
             # terminal failure: still feed the health tracker, so repeat
             # offenders get quarantined even when no run ever completes
@@ -119,6 +229,35 @@ class Scheduler:
                 self._current = improved
         return ScheduledRun(outputs=outputs, stats=stats,
                             profile=self._current, action=action)
+
+    def run_chain(self, scts: Sequence[SCT], arrays: Dict[str, Any]
+                  ) -> List[ScheduledRun]:
+        """Run a compound SCT chain with partitioned residency.
+
+        Each step's slot-local outputs are handed straight to the next
+        step (``ResidentPartition``), skipping the merge→re-split round
+        trip as long as consecutive steps share the domain decomposition;
+        on any mismatch — or on an executor without residency support —
+        the handle materialises and the step runs on the ordinary merged
+        path.  The final step always merges, so the last
+        :class:`ScheduledRun` carries the chain's outputs.  Intermediate
+        results that stayed resident are *not* merged back into the
+        caller's environment (that is the optimisation).
+        """
+        supports = bool(getattr(self.executor, "supports_residency", False))
+        env = dict(arrays)
+        resident = None
+        runs: List[ScheduledRun] = []
+        for i, sct in enumerate(scts):
+            keep = supports and i < len(scts) - 1
+            r = self.run(sct, env, _resident=resident,
+                         _keep_resident=keep)
+            resident = getattr(self.executor, "last_resident", None) \
+                if keep else None
+            if r.outputs:               # merged (final or fallback) results
+                env.update(r.outputs)
+            runs.append(r)
+        return runs
 
     def _observe_health(self, stats) -> None:
         """Feed per-device success/failure of one run into the tracker."""
@@ -169,20 +308,45 @@ class Scheduler:
         return adjusted, "adjusted"
 
     # ------------------------------------------------------------------
-    def _dispatch(self, sct: SCT, arrays: Dict[str, Any], profile: Profile
+    def _dispatch(self, sct: SCT, arrays: Dict[str, Any], profile: Profile,
+                  *, resident=None, keep_resident: bool = False
                   ) -> Tuple[Dict[str, Any], ExecutionStats]:
-        plan = build_plan(sct, {k: getattr(v, "shape", ())
-                                for k, v in arrays.items()})
+        t0 = time.perf_counter()
+        shapes = {k: tuple(getattr(v, "shape", ()))
+                  for k, v in arrays.items()}
+        if resident is not None:
+            # slot-resident vectors are inputs too: plan over their
+            # global (merged) shapes without materialising them
+            shapes = {**resident.shapes(), **shapes}
         slots = self._slots(profile)
         shares = self._per_slot_shares(profile, slots)
-        part = plan.partition(slots, shares)
-        outputs, times = self.executor.execute(sct, part, arrays, profile)
+        part, cache_hit = self.plan_cache.partition(sct, shapes, slots,
+                                                    shares)
+        plan_seconds = time.perf_counter() - t0
+
+        if getattr(self.executor, "supports_residency", False):
+            outputs, times = self.executor.execute(
+                sct, part, arrays, profile,
+                resident=resident, keep_resident=keep_resident)
+        else:
+            outputs, times = self.executor.execute(sct, part, arrays,
+                                                   profile)
         n_a = sum(1 for s in slots if s.device_type != "cpu")
         ta, tb = class_times(times, n_a)
+        timing = dict(getattr(self.executor, "last_timing", {}) or {})
         stats = ExecutionStats(
             times=list(times), share_a=profile.share_a, time_a=ta, time_b=tb,
             failures=list(getattr(self.executor, "last_failures", [])),
-            retries=int(getattr(self.executor, "last_retries", 0)))
+            retries=int(getattr(self.executor, "last_retries", 0)),
+            plan_seconds=plan_seconds,
+            pool_seconds=float(timing.get("pool", 0.0)),
+            dispatch_seconds=float(timing.get("dispatch", 0.0)),
+            compute_seconds=float(timing.get("compute", 0.0)),
+            merge_seconds=float(timing.get("merge", 0.0)),
+            merge_bytes=int(getattr(self.executor, "last_merge_bytes", 0)),
+            plan_cache_hit=cache_hit,
+            resident=getattr(self.executor, "last_resident", None)
+            is not None)
         self._last_slots = list(slots)
         return outputs, stats
 
@@ -250,6 +414,11 @@ class Scheduler:
             shares.extend([b] * n_b)
         # normalise tiny float drift (and probe-share rescaling)
         t = sum(shares)
+        if t <= 0:
+            # every participating device capped to a zero share (e.g. all
+            # probing with probe_share=0): fall back to uniform shares
+            # instead of dividing by zero
+            return [1.0 / len(shares)] * len(shares)
         return [s / t for s in shares]
 
     def _make_evaluator(self, sct: SCT, workload: Workload):
@@ -266,11 +435,21 @@ class Scheduler:
         return evaluate
 
 
-def infer_workload(sct: SCT, arrays: Dict[str, Any]) -> Workload:
-    """Workload characterisation from the request arguments (Sec. 3.2.1)."""
+def infer_workload(sct: SCT, arrays: Dict[str, Any],
+                   shapes: Optional[Dict[str, Tuple[int, ...]]] = None
+                   ) -> Workload:
+    """Workload characterisation from the request arguments (Sec. 3.2.1).
+
+    ``shapes`` supplies global shapes for inputs that are not present in
+    ``arrays`` as host arrays — slot-resident vectors on the chained
+    path (itemsize defaults to 4 for those, matching the float32
+    kernels used throughout).
+    """
     for a in sct.free_inputs():
         v = arrays.get(a.name)
         if v is not None and hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
             itemsize = getattr(getattr(v, "dtype", None), "itemsize", 4)
             return Workload(tuple(int(d) for d in v.shape), itemsize)
+        if shapes and len(shapes.get(a.name, ())) >= 1:
+            return Workload(tuple(int(d) for d in shapes[a.name]), 4)
     raise ValueError("cannot characterise workload: no vector argument")

@@ -96,6 +96,10 @@ class CostModel:
 class SimulatedExecutor:
     """Executor-interface analytic simulator."""
 
+    # analytic model: no real buffers to keep slot-resident, so the
+    # Scheduler never passes residency kwargs to this executor
+    supports_residency = False
+
     def __init__(self, devices: Sequence[SimDevice], *, seed: int = 0,
                  noise: float = 0.02, compute_outputs: bool = False,
                  cost: Optional[CostModel] = None,
@@ -114,6 +118,9 @@ class SimulatedExecutor:
         self.executions = 0
         self.last_failures: List[FaultRecord] = []
         self.last_retries = 0
+        self.last_timing: Dict[str, float] = {}
+        self.last_merge_bytes = 0
+        self.last_resident = None
 
     # -- knobs -------------------------------------------------------------
     def set_cpu_load(self, load: float) -> None:
@@ -192,6 +199,9 @@ class SimulatedExecutor:
         self.last_retries = retries
         self._last_times = times
         self._last_n_a = sum(1 for s in part.slots if s.device_type != "cpu")
+        self.last_timing = {"pool": 0.0, "dispatch": 0.0, "merge": 0.0,
+                            "compute": max(times) if times else 0.0}
+        self.last_merge_bytes = 0
         self.executions += 1
         outputs: Dict[str, Any] = {}
         if self.compute_outputs:

@@ -1,0 +1,384 @@
+"""Locality pipeline: plan cache, persistent pools, zero-copy merge,
+partitioned residency (ISSUE 7).
+
+Covers the plan-cache correctness matrix (hit on recurrent runs,
+invalidation on quarantine/reinstatement and on adjusted shares,
+bit-identical outputs vs. the uncached path including a fault-injected
+repartition run), the in-place merge and its legacy-equivalence, pool
+persistence, residency handoff/fallback, and the satellite fixes
+(`_per_slot_shares` zero-total fallback, user merge-fn precedence).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorPlatform, DeviceInfo, ExecutionSlot,
+                        FaultInjector, FaultPolicy, HostPlatform,
+                        KnowledgeBase, LoadBalancer, PlanCache,
+                        PlatformConfig, Profile, Scheduler, Session,
+                        ThreadedExecutor, Workload, build_plan, kernel,
+                        scalar, vector)
+
+POLICY = FaultPolicy(watchdog_multiple=1e6)   # no spurious watchdog on CI
+
+
+def saxpy_tree():
+    return kernel(lambda a, x, y: a * x + y, name="saxpy",
+                  inputs=[scalar("a"), vector("x"), vector("y")],
+                  outputs=[vector("z")])
+
+
+def chain_trees():
+    k2 = kernel(lambda a, z: z * a, name="scale",
+                inputs=[scalar("a"), vector("z")], outputs=[vector("w")])
+    k3 = kernel(lambda w, y: w + y, name="addy",
+                inputs=[vector("w"), vector("y")], outputs=[vector("v")])
+    return [saxpy_tree(), k2, k3]
+
+
+def saxpy_arrays(n=256, a=2.0):
+    return {"a": np.float32(a),
+            "x": np.arange(n, dtype=np.float32),
+            "y": np.ones(n, dtype=np.float32)}
+
+
+def make_scheduler(executor, **kw):
+    host = HostPlatform(DeviceInfo("cpu0", "cpu", compute_units=4),
+                        topology={"L2": 2, "NO_FISSION": 1})
+    accel = AcceleratorPlatform([DeviceInfo("gpu0", "gpu")], max_overlap=2)
+    kw.setdefault("balancer", LoadBalancer(max_dev=0.0))
+    kw.setdefault("kb", KnowledgeBase())
+    return Scheduler(host=host, accel=accel, executor=executor, **kw)
+
+
+def three_slot_part(sct, n=256, shares=(0.5, 0.25, 0.25)):
+    plan = build_plan(sct, {"x": (n,), "y": (n,)})
+    slots = [ExecutionSlot("gpu0/q0", "gpu"),
+             ExecutionSlot("cpu0/f0", "cpu"),
+             ExecutionSlot("cpu0/f1", "cpu")]
+    return plan.partition(slots, list(shares))
+
+
+def make_profile(sct, n=256, share=0.5):
+    return Profile(sct_id=sct.unique_id(), workload=Workload((n,)),
+                   share_a=share, config=PlatformConfig(),
+                   best_time=math.inf)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+class TestPlanCache:
+    def test_recurrent_run_hits_cache(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        r1 = sched.run(sct, dict(arrays))
+        r2 = sched.run(sct, dict(arrays))
+        r3 = sched.run(sct, dict(arrays))
+        assert not r1.stats.plan_cache_hit
+        assert r2.stats.plan_cache_hit and r3.stats.plan_cache_hit
+        assert sched.plan_cache.hits == 2
+        assert sched.plan_cache.misses == 1
+
+    def test_workload_change_misses(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sct = saxpy_tree()
+        sched.run(sct, saxpy_arrays(n=256))
+        r = sched.run(sct, saxpy_arrays(n=128))
+        assert not r.stats.plan_cache_hit
+
+    def test_bit_identical_to_uncached_path(self):
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        legacy = make_scheduler(ThreadedExecutor(
+            policy=POLICY, persistent_pool=False, inplace_merge=False),
+            plan_cache=False)
+        expected = np.copy(legacy.run(sct, dict(arrays)).outputs["z"])
+        cached = make_scheduler(ThreadedExecutor(policy=POLICY))
+        for _ in range(3):
+            got = np.copy(np.asarray(cached.run(sct,
+                                                dict(arrays)).outputs["z"]))
+            np.testing.assert_array_equal(expected, got)
+
+    def test_bit_identical_under_fault_repartition(self):
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        legacy = make_scheduler(ThreadedExecutor(
+            policy=POLICY, persistent_pool=False, inplace_merge=False),
+            plan_cache=False)
+        expected = np.copy(legacy.run(sct, dict(arrays)).outputs["z"])
+        inj = FaultInjector(crash_on_call={"gpu0": [2]})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY, injector=inj))
+        sched.run(sct, dict(arrays))                 # populate the cache
+        r = sched.run(sct, dict(arrays))             # cache hit + crash
+        assert r.stats.plan_cache_hit
+        assert r.stats.retries == 1
+        np.testing.assert_array_equal(
+            expected, np.copy(np.asarray(r.outputs["z"])))
+
+    def test_invalidated_on_quarantine_and_reinstatement(self):
+        inj = FaultInjector(crash_on_call={"gpu0": [2, 3]})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY, injector=inj))
+        sched.health.quarantine_after = 1
+        sched.health.probe_after = 1
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        sched.run(sct, dict(arrays))                 # clean, cache filled
+        sched.run(sct, dict(arrays))                 # gpu0 crash -> quarantine
+        before = sched.plan_cache.invalidations
+        r = sched.run(sct, dict(arrays))             # health version moved
+        assert sched.plan_cache.invalidations == before + 1
+        assert not r.stats.plan_cache_hit            # new (CPU-only) slots
+        # probation probe succeeds -> reinstatement bumps the version again
+        before = sched.plan_cache.invalidations
+        sched.run(sct, dict(arrays))                 # probe run (clean)
+        sched.run(sct, dict(arrays))
+        assert sched.plan_cache.invalidations >= before + 1
+
+    def test_invalidated_on_adjusted_shares(self):
+        # an unbalanced balancer forces the "adjusted" action on the
+        # recurrent path, which must explicitly invalidate the cache
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               balancer=LoadBalancer(max_dev=1.5, weight=1.0))
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        sched.run(sct, dict(arrays))
+        before = sched.plan_cache.invalidations
+        r = sched.run(sct, dict(arrays))
+        assert r.action == "adjusted"
+        assert sched.plan_cache.invalidations == before + 1
+
+    def test_disabled_cache_never_hits(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               plan_cache=False)
+        sct, arrays = saxpy_tree(), saxpy_arrays()
+        for _ in range(3):
+            assert not sched.run(sct, dict(arrays)).stats.plan_cache_hit
+        assert sched.plan_cache.hits == 0
+
+    def test_capacity_bound(self):
+        cache = PlanCache(capacity=2)
+        sct = saxpy_tree()
+        slots = [ExecutionSlot("cpu0/f0", "cpu")]
+        for n in (64, 128, 256):
+            cache.partition(sct, {"x": (n,), "y": (n,)}, slots, [1.0])
+        assert len(cache._parts) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Persistent pools
+# ---------------------------------------------------------------------------
+
+class TestPersistentPool:
+    def test_pool_created_once_and_reused(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        for _ in range(3):
+            ex.execute(sct, part, saxpy_arrays(), prof)
+        assert ex.pools_created == 1
+        assert ex.pool_reuses == 2
+        ex.close()
+
+    def test_legacy_flag_restores_per_run_pools(self):
+        ex = ThreadedExecutor(policy=POLICY, persistent_pool=False)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        for _ in range(2):
+            ex.execute(sct, part, saxpy_arrays(), prof)
+        assert ex.pools_created == 0            # legacy path never registers
+        assert ex._pool is None
+
+    def test_session_shutdown_closes_executor(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sched = make_scheduler(ex)
+        with Session(sched) as s:
+            s.run(saxpy_tree(), **saxpy_arrays()).get()
+        assert ex._pool is None
+        assert ex._buffers == {}
+
+
+# ---------------------------------------------------------------------------
+# In-place merge
+# ---------------------------------------------------------------------------
+
+class TestInPlaceMerge:
+    def test_matches_legacy_concatenate_merge(self):
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        arrays = saxpy_arrays()
+        legacy = ThreadedExecutor(policy=POLICY, inplace_merge=False,
+                                  persistent_pool=False)
+        expected, _ = legacy.execute(sct, part, dict(arrays), prof)
+        ex = ThreadedExecutor(policy=POLICY)
+        got, _ = ex.execute(sct, part, dict(arrays), prof)
+        np.testing.assert_array_equal(np.asarray(expected["z"]),
+                                      np.asarray(got["z"]))
+        ex.close()
+
+    def test_zero_merge_bytes_once_shape_learned(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        ex.execute(sct, part, saxpy_arrays(), prof)     # learns shape
+        assert ex.last_merge_bytes > 0                  # packing copy
+        ex.execute(sct, part, saxpy_arrays(), prof)     # direct writes
+        assert ex.last_merge_bytes == 0
+        assert ex.last_direct_bytes == 256 * 4
+        ex.close()
+
+    def test_outputs_reuse_buffer_across_runs(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        o1, _ = ex.execute(sct, part, saxpy_arrays(a=2.0), prof)
+        z1 = o1["z"]
+        o2, _ = ex.execute(sct, part, saxpy_arrays(a=3.0), prof)
+        assert o2["z"] is z1        # documented aliasing semantics
+        ex.close()
+
+    def test_user_merge_fn_precedence_over_partitionable(self):
+        # satellite: a user-supplied merge fn wins even though "z" is a
+        # partitionable output that would otherwise be concatenated
+        merges = {"z": lambda parts: sum(np.sum(p) for p in parts)}
+        ex = ThreadedExecutor(policy=POLICY, merges=merges)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        arrays = saxpy_arrays()
+        out, _ = ex.execute(sct, part, dict(arrays), make_profile(sct))
+        expected = np.sum(2.0 * arrays["x"] + arrays["y"])
+        assert np.isclose(float(out["z"]), float(expected))
+        ex.close()
+
+    def test_buffers_dropped_after_timeout(self):
+        inj = FaultInjector(stall_on_call={"gpu0": [2]}, stall_seconds=2.0)
+        ex = ThreadedExecutor(
+            policy=FaultPolicy(watchdog_multiple=1.0, min_deadline=0.2,
+                               default_deadline=0.2), injector=inj)
+        sct = saxpy_tree()
+        part = three_slot_part(sct)
+        prof = make_profile(sct)
+        ex.execute(sct, part, saxpy_arrays(), prof)
+        assert ex._buffers                       # learned + retained
+        ex.execute(sct, part, saxpy_arrays(), prof)   # stall -> timeout
+        assert any(r.kind == "timeout" for r in ex.last_failures)
+        assert ex._buffers == {}                 # hung thread can't corrupt
+        ex.close()
+
+
+# ---------------------------------------------------------------------------
+# Partitioned residency
+# ---------------------------------------------------------------------------
+
+class TestResidency:
+    def expected_v(self, arrays):
+        return (2.0 * (2.0 * arrays["x"] + arrays["y"])) + arrays["y"]
+
+    def test_chain_matches_sequential_merge(self):
+        arrays = saxpy_arrays()
+        legacy = make_scheduler(ThreadedExecutor(
+            policy=POLICY, persistent_pool=False, inplace_merge=False),
+            plan_cache=False)
+        env = dict(arrays)
+        for sct in chain_trees():
+            env.update({k: np.copy(v) for k, v in
+                        legacy.run(sct, env).outputs.items()})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        runs = sched.run_chain(chain_trees(), dict(arrays))
+        np.testing.assert_array_equal(
+            env["v"], np.copy(np.asarray(runs[-1].outputs["v"])))
+
+    def test_intermediate_steps_stay_resident(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        runs = sched.run_chain(chain_trees(), saxpy_arrays())
+        assert [r.stats.resident for r in runs] == [True, True, False]
+        assert all(r.stats.merge_bytes == 0 for r in runs[:-1])
+        assert runs[0].outputs == {}             # merge skipped entirely
+
+    def test_fault_falls_back_to_full_merge(self):
+        arrays = saxpy_arrays()
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY, injector=inj))
+        runs = sched.run_chain(chain_trees(), dict(arrays))
+        assert runs[0].stats.retries == 1
+        assert not runs[0].stats.resident        # repartitioned -> merged
+        np.testing.assert_array_equal(
+            self.expected_v(arrays),
+            np.copy(np.asarray(runs[-1].outputs["v"])))
+
+    def test_incompatible_partitioning_materializes(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sct = saxpy_tree()
+        prof = make_profile(sct)
+        ex.execute(sct, three_slot_part(sct), saxpy_arrays(), prof,
+                   keep_resident=True)
+        res = ex.last_resident
+        assert res is not None
+        other = three_slot_part(sct, shares=(0.25, 0.5, 0.25))
+        assert not res.compatible(other)
+        merged = res.materialize()
+        expected = 2.0 * saxpy_arrays()["x"] + saxpy_arrays()["y"]
+        np.testing.assert_array_equal(expected, np.asarray(merged["z"]))
+        ex.close()
+
+    def test_simulator_has_no_residency(self):
+        from repro.core import SimulatedExecutor
+        assert SimulatedExecutor.supports_residency is False
+
+    def test_session_run_chain(self):
+        arrays = saxpy_arrays()
+        with Session(make_scheduler(ThreadedExecutor(policy=POLICY))) as s:
+            runs = s.run_chain(chain_trees(), **arrays).get()
+        np.testing.assert_array_equal(
+            self.expected_v(arrays),
+            np.copy(np.asarray(runs[-1].outputs["v"])))
+
+
+# ---------------------------------------------------------------------------
+# Timing instrumentation
+# ---------------------------------------------------------------------------
+
+class TestTimingBreakdown:
+    def test_breakdown_populated(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        r = sched.run(saxpy_tree(), saxpy_arrays())
+        s = r.stats
+        assert s.plan_seconds > 0
+        assert s.compute_seconds > 0
+        assert s.merge_seconds >= 0
+        assert s.overhead_seconds == pytest.approx(
+            s.plan_seconds + s.pool_seconds + s.dispatch_seconds
+            + s.merge_seconds)
+
+    def test_simulator_reports_timing(self):
+        from repro.core import SimDevice, SimulatedExecutor
+        ex = SimulatedExecutor([SimDevice("gpu0", "gpu", flops=1e12),
+                                SimDevice("cpu0", "cpu", flops=1e11,
+                                          cores=4)])
+        sched = make_scheduler(ex)
+        r = sched.run(saxpy_tree(), saxpy_arrays())
+        assert r.stats.merge_bytes == 0
+        assert r.stats.compute_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: zero-total share fallback
+# ---------------------------------------------------------------------------
+
+class TestZeroShareFallback:
+    def test_all_probing_with_zero_probe_share(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sched.health.probe_share = 0.0
+        sched.health.quarantine_after = 1
+        sched.health.probe_after = 0
+        # quarantine every device, then let them all probe at share 0
+        sched.health.record_failure("gpu0")
+        sched.health.record_failure("cpu0")
+        prof = make_profile(saxpy_tree())
+        slots = sched._slots(prof)
+        shares = sched._per_slot_shares(prof, slots)   # no ZeroDivisionError
+        assert shares == pytest.approx([1.0 / len(slots)] * len(slots))
+        assert sum(shares) == pytest.approx(1.0)
