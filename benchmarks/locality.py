@@ -38,8 +38,13 @@ import numpy as np
 from repro.core import (AcceleratorPlatform, DeviceInfo, FaultInjector,
                         FaultPolicy, HostPlatform, KnowledgeBase,
                         LoadBalancer, Origin, PlatformConfig, Profile,
-                        Scheduler, ThreadedExecutor, infer_workload, kernel,
-                        scalar, vector)
+                        Scheduler, Telemetry, ThreadedExecutor,
+                        infer_workload, kernel, scalar, vector)
+
+try:
+    from benchmarks.report import embed_metrics
+except ImportError:                     # run as `python benchmarks/...`
+    from report import embed_metrics
 
 # a huge watchdog multiple disables spurious timeout trips on busy CI
 POLICY = FaultPolicy(watchdog_multiple=1e6)
@@ -62,7 +67,8 @@ def make_arrays(n: int):
             "y": np.ones(n, dtype=np.float32)}
 
 
-def make_scheduler(*, optimized: bool, injector=None) -> Scheduler:
+def make_scheduler(*, optimized: bool, injector=None,
+                   telemetry=None) -> Scheduler:
     host = HostPlatform(DeviceInfo("cpu0", "cpu", compute_units=4),
                         topology={"L2": 2, "NO_FISSION": 1})
     accel = AcceleratorPlatform([DeviceInfo("gpu0", "gpu")], max_overlap=2)
@@ -73,7 +79,7 @@ def make_scheduler(*, optimized: bool, injector=None) -> Scheduler:
     sched = Scheduler(host=host, accel=accel, executor=ex,
                       kb=KnowledgeBase(),
                       balancer=LoadBalancer(max_dev=0.0),
-                      plan_cache=optimized)
+                      plan_cache=optimized, telemetry=telemetry)
     # pre-store fission profiles so both legs run the same slot layout
     # and no watchdog deadline applies (best_time stays infinite)
     for sct in chain_kernels():
@@ -106,8 +112,9 @@ def bench(smoke: bool):
     arrays = make_arrays(ARGS.n)
 
     # -- recurrent single-SCT phase -----------------------------------------
+    telemetry = Telemetry()      # shared by every optimized-leg scheduler
     base = make_scheduler(optimized=False)
-    opt = make_scheduler(optimized=True)
+    opt = make_scheduler(optimized=True, telemetry=telemetry)
     sct = chain_kernels()[0]
     base_over, opt_over = [], []
     for sched, sink in ((base, base_over), (opt, opt_over)):
@@ -120,7 +127,7 @@ def bench(smoke: bool):
 
     # -- compound-chain phase ------------------------------------------------
     base_c = make_scheduler(optimized=False)
-    opt_c = make_scheduler(optimized=True)
+    opt_c = make_scheduler(optimized=True, telemetry=telemetry)
     expected, _ = run_sequential(base_c, arrays, copy_out=True)
     base_chain, opt_chain = [], []
     resident_bytes = []
@@ -138,7 +145,8 @@ def bench(smoke: bool):
 
     # -- fault-injected chain (repartition fallback) -------------------------
     inj = FaultInjector(crash_on_call={"gpu0": [1]})
-    faulted = make_scheduler(optimized=True, injector=inj)
+    faulted = make_scheduler(optimized=True, injector=inj,
+                             telemetry=telemetry)
     fruns = faulted.run_chain(chain_kernels(), dict(arrays))
     bit_identical_faulted = bool(np.array_equal(
         expected, np.copy(np.asarray(fruns[-1].outputs["v"]))))
@@ -172,7 +180,7 @@ def bench(smoke: bool):
         "bit_identical_faulted": bit_identical_faulted,
         "faulted_retries": faulted_retries,
     }
-    return result
+    return embed_metrics(result, telemetry)
 
 
 def check(result) -> int:

@@ -12,6 +12,21 @@ import re
 GiB = 2 ** 30
 
 
+def embed_metrics(result: dict, telemetry) -> dict:
+    """Embed a telemetry metrics snapshot into a BENCH_*.json result.
+
+    Every benchmark that runs under a telemetry-enabled scheduler calls
+    this before dumping its JSON, so artifacts carry the counters
+    (plan-cache hit ratio, retries, per-device busy seconds, ...) that
+    produced the headline numbers.  ``telemetry`` is a
+    ``repro.core.telemetry.Telemetry``; the import is lazy so this
+    module stays usable without ``PYTHONPATH=src``.
+    """
+    from repro.core.telemetry import metrics_block
+    result["metrics"] = metrics_block(telemetry)
+    return result
+
+
 def load(mesh):
     cells = {}
     for p in sorted(glob.glob(f"experiments/dryrun/{mesh}/*.json")):

@@ -12,7 +12,8 @@ Layers (paper Fig. 2):
              (Algorithm 1), :mod:`repro.core.knowledge_base` (profiles +
              RBF/NN derivation), :mod:`repro.core.load_balancer` (lbt),
              :mod:`repro.core.platforms` (fission / overlap back-ends),
-             :mod:`repro.core.executor` / :mod:`repro.core.simulator`.
+             :mod:`repro.core.executor` / :mod:`repro.core.simulator`,
+             :mod:`repro.core.telemetry` (tracing, metrics, event log).
 """
 from repro.core.decomposition import (ConcretePartitioning, DecompositionError,
                                       DecompositionPlan, ExecutionSlot,
@@ -38,6 +39,9 @@ from repro.core.skeletons import (SCT, KernelNode, Loop, LoopState, Map,
 from repro.core.spec import (ArgSpec, KernelSpec, MERGE_ADD, MERGE_DIV,
                              MERGE_MUL, MERGE_SUB, Trait, Transfer, Workload,
                              scalar, vector)
+from repro.core.telemetry import (Event, EventLog, MetricsRegistry,
+                                  NULL_TELEMETRY, Telemetry, Tracer,
+                                  metrics_block, validate_chrome_trace)
 from repro.core.autotuner import TunerParams, TuneResult, build_profile
 
 __all__ = [n for n in dir() if not n.startswith("_")]

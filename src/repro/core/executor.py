@@ -86,6 +86,7 @@ from repro.core.faults import (ExecutionError, FaultInjector, FaultPolicy,
 from repro.core.knowledge_base import Profile
 from repro.core.skeletons import SCT, PartitionInfo
 from repro.core.spec import ArgSpec, MergeFn, Transfer, Workload
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 
 def output_spec(sct: SCT, name: str) -> Optional[ArgSpec]:
@@ -253,7 +254,9 @@ class ThreadedExecutor:
                  policy: FaultPolicy = FaultPolicy(),
                  persistent_pool: bool = True,
                  inplace_merge: bool = True,
-                 reuse_buffers: bool = True):
+                 reuse_buffers: bool = True,
+                 telemetry: Optional[Telemetry] = None):
+        self.telemetry = telemetry or NULL_TELEMETRY
         self.merges = dict(merges or {})
         self.max_workers = max_workers
         self.injector = injector
@@ -295,14 +298,18 @@ class ThreadedExecutor:
 
     def _acquire_pool(self, n: int) -> cf.ThreadPoolExecutor:
         t0 = time.perf_counter()
-        if self._pool is not None and self._pool_size < n:
-            self._retire_pool()
-        if self._pool is None:
-            self._pool = cf.ThreadPoolExecutor(max_workers=n)
-            self._pool_size = n
-            self.pools_created += 1
-        else:
-            self.pool_reuses += 1
+        with self.telemetry.tracer.span("pool", workers=n) as sp:
+            if self._pool is not None and self._pool_size < n:
+                self._retire_pool()
+            if self._pool is None:
+                self._pool = cf.ThreadPoolExecutor(max_workers=n)
+                self._pool_size = n
+                self.pools_created += 1
+                self.telemetry.metrics.counter("pools_created_total").inc()
+                sp.note(created=True)
+            else:
+                self.pool_reuses += 1
+                self.telemetry.metrics.counter("pool_reuses_total").inc()
         self._pool_seconds += time.perf_counter() - t0
         return self._pool
 
@@ -312,6 +319,22 @@ class ThreadedExecutor:
                 resident: Optional[ResidentPartition] = None,
                 keep_resident: bool = False
                 ) -> Tuple[Dict[str, Any], List[float]]:
+        with self.telemetry.tracer.span(
+                "dispatch", sct=sct.unique_id(), slots=len(part.slots),
+                keep_resident=keep_resident) as sp:
+            outputs, times = self._execute(
+                sct, part, arrays, profile, resident=resident,
+                keep_resident=keep_resident)
+            sp.note(retries=self.last_retries,
+                    merge_bytes=self.last_merge_bytes,
+                    resident=self.last_resident is not None)
+            return outputs, times
+
+    def _execute(self, sct: SCT, part: ConcretePartitioning,
+                 arrays: Dict[str, Any], profile: Profile, *,
+                 resident: Optional[ResidentPartition] = None,
+                 keep_resident: bool = False
+                 ) -> Tuple[Dict[str, Any], List[float]]:
         t_run0 = time.perf_counter()
         self._pool_seconds = 0.0
         merge_bytes = 0
@@ -342,22 +365,33 @@ class ThreadedExecutor:
         done: List[Tuple[_Segment, _SlotResult]] = []
         per_slot_seconds = [0.0] * len(part.slots)
 
+        tel = self.telemetry
         attempts_seconds = 0.0
         pending = segments
         for attempt in range(self.policy.max_attempts):
             t_a0 = time.perf_counter()
-            outcomes = self._run_attempt(sct, part, arrays, pending,
-                                         deadline, attempt, resident, targets)
-            attempts_seconds += time.perf_counter() - t_a0
-            failed: List[_Segment] = []
-            for seg, res in zip(pending, outcomes):
-                per_slot_seconds[seg.slot] += res.seconds
-                if isinstance(res, FaultRecord):
-                    records.append(res)
-                    dead.add(seg.slot)
-                    failed.append(seg)
-                else:
-                    done.append((seg, res))
+            with tel.tracer.span("attempt", attempt=attempt,
+                                 segments=len(pending)) as att_span:
+                outcomes = self._run_attempt(sct, part, arrays, pending,
+                                             deadline, attempt, resident,
+                                             targets)
+                attempts_seconds += time.perf_counter() - t_a0
+                failed: List[_Segment] = []
+                for seg, res in zip(pending, outcomes):
+                    per_slot_seconds[seg.slot] += res.seconds
+                    if isinstance(res, FaultRecord):
+                        records.append(res)
+                        dead.add(seg.slot)
+                        failed.append(seg)
+                        tel.metrics.counter("faults_total",
+                                            kind=res.kind).inc()
+                        tel.events.emit(
+                            "fault", level="warning", message=res.message,
+                            device=res.device, fault_kind=res.kind,
+                            attempt=res.attempt, slot=res.slot)
+                    else:
+                        done.append((seg, res))
+                att_span.note(faults=len(failed))
             lost = [s for s in failed if s.units > 0]
             if not lost:
                 break
@@ -382,22 +416,31 @@ class ThreadedExecutor:
                         pending.append(_Segment(slot=j, start=start, units=u))
                         start += u
             retries += 1
+            tel.events.emit("retry.repartition",
+                            lost_units=sum(s.units for s in lost),
+                            survivors=len(alive), attempt=attempt)
 
         if any(r.kind == "timeout" for r in records):
             # an abandoned hung thread may still write into the current
             # buffers — retire them so later runs get untainted memory
             self._buffers = {}
+            tel.events.emit("buffers.dropped", level="warning",
+                            message="output buffers retired after a slot "
+                                    "timeout (hung-thread containment)")
 
         done.sort(key=lambda sr: sr[0].start)
         clean = retries == 0 and not records
         t_m0 = time.perf_counter()
         if keep_resident and clean:
-            self.last_resident = self._make_resident(
-                sct, part, done, resident, inherited_extras)
+            with tel.tracer.span("resident-handoff", segments=len(done)):
+                self.last_resident = self._make_resident(
+                    sct, part, done, resident, inherited_extras)
             outputs: Dict[str, Any] = {}
         else:
             self.last_resident = None
-            outputs, copied = self._merge(sct, part, done, targets)
+            with tel.tracer.span("merge") as merge_span:
+                outputs, copied = self._merge(sct, part, done, targets)
+                merge_span.note(merge_bytes=copied)
             merge_bytes += copied
             if inherited_extras and keep_resident:
                 # chain fallback: surface carried values with the merge
@@ -432,28 +475,33 @@ class ThreadedExecutor:
         def work(seg: _Segment) -> Union[_SlotResult, FaultRecord]:
             slot = part.slots[seg.slot]
             t0 = time.perf_counter()
-            try:
-                if self.injector is not None:
-                    kind = self.injector.decide(slot.device)
-                    if kind == "crash":
-                        raise InjectedFault(
-                            f"injected crash on {slot.device}")
-                    if kind == "stall":
-                        time.sleep(self.injector.stall_seconds)
-                env = self._segment_env(part, arrays, seg, resident)
-                out_env = sct.apply(env)
-                for v in out_env.values():
-                    if hasattr(v, "block_until_ready"):
-                        v.block_until_ready()
-                written = self._direct_write(out_env, seg, targets)
-                return _SlotResult(out_env, time.perf_counter() - t0, written)
-            except Exception as e:       # containment: never crosses the slot
-                return FaultRecord(
-                    slot=seg.slot, device=slot.device,
-                    device_type=slot.device_type, kind="crash",
-                    attempt=attempt,
-                    message=f"{type(e).__name__}: {e}",
-                    seconds=time.perf_counter() - t0)
+            with self.telemetry.tracer.span(
+                    "slot", device=slot.device, units=seg.units,
+                    offset=seg.start, attempt=attempt) as sp:
+                try:
+                    if self.injector is not None:
+                        kind = self.injector.decide(slot.device)
+                        if kind == "crash":
+                            raise InjectedFault(
+                                f"injected crash on {slot.device}")
+                        if kind == "stall":
+                            time.sleep(self.injector.stall_seconds)
+                    env = self._segment_env(part, arrays, seg, resident)
+                    out_env = sct.apply(env)
+                    for v in out_env.values():
+                        if hasattr(v, "block_until_ready"):
+                            v.block_until_ready()
+                    written = self._direct_write(out_env, seg, targets)
+                    return _SlotResult(out_env, time.perf_counter() - t0,
+                                       written)
+                except Exception as e:   # containment: never crosses the slot
+                    sp.note(fault=type(e).__name__)
+                    return FaultRecord(
+                        slot=seg.slot, device=slot.device,
+                        device_type=slot.device_type, kind="crash",
+                        attempt=attempt,
+                        message=f"{type(e).__name__}: {e}",
+                        seconds=time.perf_counter() - t0)
 
         if deadline is None and len(segments) == 1:
             return [work(segments[0])]
@@ -836,10 +884,21 @@ class Session:
     :class:`~repro.core.faults.ExecutionError`.  ``shutdown`` also closes
     the scheduler's executor (persistent worker pool, reusable output
     buffers — see :class:`ThreadedExecutor`).
+
+    ``telemetry`` installs a shared :class:`~repro.core.telemetry.Telemetry`
+    bundle across the scheduler, executor, health tracker and balancer;
+    :meth:`metrics`, :meth:`counters`, :meth:`export_trace` and
+    :meth:`prometheus` expose what it collected.  Without one, the
+    pipeline runs on the no-op ``NULL_TELEMETRY`` (off-by-default cheap).
     """
 
-    def __init__(self, scheduler):
+    def __init__(self, scheduler, *,
+                 telemetry: Optional[Telemetry] = None):
         self.scheduler = scheduler
+        if telemetry is not None and hasattr(scheduler, "attach_telemetry"):
+            scheduler.attach_telemetry(telemetry)
+        self.telemetry = getattr(scheduler, "telemetry", None) \
+            or telemetry or NULL_TELEMETRY
         self._pool = cf.ThreadPoolExecutor(max_workers=1)  # FCFS batch queue
 
     def __enter__(self) -> "Session":
@@ -878,6 +937,28 @@ class Session:
         def chain():
             return self.scheduler.run_chain(list(scts), arrays)
         return Future(self._pool.submit(chain), deadline=deadline)
+
+    # -- observability --------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        """JSON snapshot of every metric series the pipeline recorded."""
+        return self.telemetry.metrics.snapshot()
+
+    def prometheus(self) -> str:
+        """Prometheus text-format dump of the metrics registry."""
+        return self.telemetry.metrics.to_prometheus()
+
+    def counters(self) -> Dict[str, float]:
+        """Namespaced pipeline counters (see ``Scheduler.counters``)."""
+        counters = getattr(self.scheduler, "counters", None)
+        return counters() if counters is not None else {}
+
+    def events(self, kind: Optional[str] = None):
+        """Recent structured events, optionally filtered by kind prefix."""
+        return self.telemetry.events.records(kind)
+
+    def export_trace(self, path: str) -> Dict[str, Any]:
+        """Write the Chrome/Perfetto ``trace.json``; returns the object."""
+        return self.telemetry.export_trace(path)
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=True)

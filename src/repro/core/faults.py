@@ -39,6 +39,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.telemetry import NULL_TELEMETRY
+
 
 # ---------------------------------------------------------------------------
 # Error taxonomy
@@ -252,6 +254,7 @@ class DeviceHealth:
         self.probe_share = probe_share
         self.runs = 0                   # scheduled-run clock
         self.version = 0                # bumped on quarantine/reinstatement
+        self.telemetry = NULL_TELEMETRY
         self._entries: Dict[str, _HealthEntry] = {}
 
     def _entry(self, device: str) -> _HealthEntry:
@@ -263,23 +266,47 @@ class DeviceHealth:
         self.runs += 1
 
     def record_failure(self, device: str) -> bool:
-        """Register one slot fault; True if the device is now quarantined."""
+        """Register one slot fault; True if the device is now quarantined.
+
+        A quarantine transition is never silent: it is emitted as a
+        warning-level event through the telemetry logging bridge (which
+        forwards to the ``repro.telemetry`` stdlib logger even when
+        telemetry is disabled), carrying the device identity and the
+        consecutive-failure count that tripped the threshold."""
         e = self._entry(device)
         e.consecutive_failures += 1
         e.total_failures += 1
+        self.telemetry.metrics.counter("device_failures_total",
+                                       device=device).inc()
         if e.consecutive_failures >= self.quarantine_after:
             if e.quarantined_at < 0:
                 self.version += 1       # slot set changed: plans go stale
+                self.telemetry.metrics.counter("quarantines_total").inc()
+                self.telemetry.events.emit(
+                    "health.quarantined", level="warning",
+                    message=f"device {device} quarantined after "
+                            f"{e.consecutive_failures} consecutive failures",
+                    device=device,
+                    consecutive_failures=e.consecutive_failures,
+                    run=self.runs)
             e.quarantined_at = self.runs
             return True
         return False
 
     def record_success(self, device: str) -> None:
         e = self._entry(device)
+        was_quarantined = e.quarantined_at >= 0
         e.consecutive_failures = 0
         e.total_successes += 1
-        if e.quarantined_at >= 0:
+        if was_quarantined:
             self.version += 1           # reinstatement: slot set changed
+            self.telemetry.metrics.counter("reinstatements_total").inc()
+            self.telemetry.events.emit(
+                "health.reinstated", level="warning",
+                message=f"device {device} reinstated after a clean "
+                        "probe run",
+                device=device, run=self.runs,
+                total_failures=e.total_failures)
         e.quarantined_at = -1           # clean probe run -> reinstated
 
     # -- queries -------------------------------------------------------------

@@ -32,6 +32,7 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from repro.core.distribution import AdaptiveBinarySearch, Distribution
+from repro.core.telemetry import NULL_TELEMETRY
 
 
 @dataclasses.dataclass
@@ -108,6 +109,7 @@ class LoadBalancer:
         self.lbt = 0.0
         self.unbalanced_runs = 0
         self.balance_ops = 0
+        self.telemetry = NULL_TELEMETRY
         self._search: Optional[AdaptiveBinarySearch] = None
 
     # -- detector -------------------------------------------------------------
@@ -126,8 +128,16 @@ class LoadBalancer:
         ub = 1.0 if self.is_unbalanced(stats.deviation) else 0.0
         if ub:
             self.unbalanced_runs += 1
+            self.telemetry.metrics.counter("balancer_unbalanced_total").inc()
         self.lbt = ub * self.weight + self.lbt * (1.0 - self.weight)
-        return self.lbt >= self.trigger
+        self.telemetry.metrics.gauge("balancer_lbt").set(self.lbt)
+        triggered = self.lbt >= self.trigger
+        if triggered:
+            self.telemetry.events.emit(
+                "balancer.trigger", lbt=round(self.lbt, 6),
+                deviation=round(stats.deviation, 6),
+                share_a=stats.share_a)
+        return triggered
 
     # -- corrector --------------------------------------------------------------
     def adjust(self, current: Distribution, stats_a: float, stats_b: float,
@@ -149,6 +159,10 @@ class LoadBalancer:
             self._search.next()
         new = self._search.feedback(stats_a, stats_b)
         self.balance_ops += 1
+        self.telemetry.metrics.counter("balancer_adjustments_total").inc()
+        self.telemetry.events.emit(
+            "balancer.adjust", share_a_before=round(current.a, 6),
+            share_a_after=round(new.a, 6), time_a=stats_a, time_b=stats_b)
         return new
 
     def reset_search(self) -> None:

@@ -51,6 +51,7 @@ from repro.core.load_balancer import ExecutionStats, LoadBalancer, class_times
 from repro.core.platforms import AcceleratorPlatform, HostPlatform
 from repro.core.skeletons import SCT
 from repro.core.spec import Workload
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 
 @dataclasses.dataclass
@@ -89,6 +90,7 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.telemetry: Telemetry = NULL_TELEMETRY
         self._plans: Dict[Tuple, DecompositionPlan] = {}
         self._parts: Dict[Tuple, ConcretePartitioning] = {}
 
@@ -144,6 +146,8 @@ class PlanCache:
         self.invalidations += 1
         self._plans.clear()
         self._parts.clear()
+        self.telemetry.metrics.counter("plan_cache_invalidations_total").inc()
+        self.telemetry.events.emit("plan_cache.invalidated", reason=reason)
 
     @property
     def hit_rate(self) -> float:
@@ -164,7 +168,8 @@ class Scheduler:
                  tuner_params: TunerParams = TunerParams(),
                  default_share_a: float = 0.8,
                  health: Optional[DeviceHealth] = None,
-                 plan_cache: bool = True):
+                 plan_cache: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         self.host = host
         self.accel = accel
         self.executor = executor
@@ -179,6 +184,23 @@ class Scheduler:
         self._last_key: Optional[Tuple[str, str]] = None
         self._current: Optional[Profile] = None
         self._last_slots: List[ExecutionSlot] = []
+        self._counts = {"runs": 0, "failed_runs": 0, "retries": 0,
+                        "resident_handoffs": 0}
+        self.telemetry = NULL_TELEMETRY
+        self.attach_telemetry(telemetry or NULL_TELEMETRY)
+
+    def attach_telemetry(self, telemetry: Telemetry) -> None:
+        """Share one telemetry bundle across the whole pipeline.
+
+        Propagated to the plan cache, the executor, the device-health
+        tracker and the load balancer, so spans, metrics and events
+        from every layer land in a single trace/registry."""
+        self.telemetry = telemetry
+        self.plan_cache.telemetry = telemetry
+        self.health.telemetry = telemetry
+        self.balancer.telemetry = telemetry
+        if hasattr(self.executor, "telemetry"):
+            self.executor.telemetry = telemetry
 
     # ------------------------------------------------------------------
     def run(self, sct: SCT, arrays: Dict[str, Any],
@@ -188,47 +210,110 @@ class Scheduler:
         workload = workload or infer_workload(sct, arrays, shapes=shapes)
         key = (sct.unique_id(), workload.key())
 
-        if key != self._last_key or self._current is None:
-            profile, action = self._derive(sct, workload)           # Fig. 4 left
-        else:
-            profile, action = self._recurrent(sct, workload)        # Fig. 4 right
-        self._last_key, self._current = key, profile
+        tel = self.telemetry
+        with tel.tracer.span("run", sct=sct.unique_id(),
+                             workload=str(workload.key())) as run_span:
+            if key != self._last_key or self._current is None:
+                profile, action = self._derive(sct, workload)       # Fig. 4 left
+            else:
+                profile, action = self._recurrent(sct, workload)    # Fig. 4 right
+            self._last_key, self._current = key, profile
+            run_span.note(action=action)
+            tel.metrics.counter("scheduler_actions_total",
+                                action=action).inc()
 
-        # explicit plan-cache invalidation: distribution adjusted, profile
-        # rebuilt, or the device-health state (quarantine / probation /
-        # reinstatement) moved since the cache entries were created
-        if action in ("adjusted", "built"):
-            self.plan_cache.invalidate("share adjustment")
-        if self.health.version != self._health_seen:
-            self.plan_cache.invalidate("device-health change")
-            self._health_seen = self.health.version
+            # explicit plan-cache invalidation: distribution adjusted, profile
+            # rebuilt, or the device-health state (quarantine / probation /
+            # reinstatement) moved since the cache entries were created
+            if action in ("adjusted", "built"):
+                self.plan_cache.invalidate("share adjustment")
+            if self.health.version != self._health_seen:
+                self.plan_cache.invalidate("device-health change")
+                self._health_seen = self.health.version
 
-        self.health.tick()
-        try:
-            outputs, stats = self._dispatch(sct, arrays, profile,
-                                            resident=_resident,
-                                            keep_resident=_keep_resident)
-        except ExecutionError as e:
-            # terminal failure: still feed the health tracker, so repeat
-            # offenders get quarantined even when no run ever completes
-            for base in {r.device_base for r in e.records}:
-                self.health.record_failure(base)
-            raise
-        self._observe_health(stats)
+            self.health.tick()
+            try:
+                outputs, stats = self._dispatch(sct, arrays, profile,
+                                                resident=_resident,
+                                                keep_resident=_keep_resident)
+            except ExecutionError as e:
+                # terminal failure: still feed the health tracker, so repeat
+                # offenders get quarantined even when no run ever completes
+                for base in {r.device_base for r in e.records}:
+                    self.health.record_failure(base)
+                self._counts["runs"] += 1
+                self._counts["failed_runs"] += 1
+                tel.metrics.counter("runs_total", status="error").inc()
+                tel.events.emit("run.error", level="error",
+                                message=str(e), sct=sct.unique_id(),
+                                attempts=e.attempts)
+                raise
+            self._observe_health(stats)
+            self._record_run_metrics(sct, stats)
 
-        # Monitor: update detector; persist best-known configurations.
-        # Failed runs are excluded — their times mix real compute with
-        # retry noise and would corrupt the lbt detector and KB profiles.
-        if stats.ok:
-            trigger = self.balancer.observe(stats)
-            if not trigger:
-                self.balancer.balanced_again()
-            if stats.total < profile.best_time:
-                improved = dataclasses.replace(profile, best_time=stats.total)
-                self.kb.store(improved)
-                self._current = improved
-        return ScheduledRun(outputs=outputs, stats=stats,
-                            profile=self._current, action=action)
+            # Monitor: update detector; persist best-known configurations.
+            # Failed runs are excluded — their times mix real compute with
+            # retry noise and would corrupt the lbt detector and KB profiles.
+            if stats.ok:
+                trigger = self.balancer.observe(stats)
+                if not trigger:
+                    self.balancer.balanced_again()
+                if stats.total < profile.best_time:
+                    improved = dataclasses.replace(profile,
+                                                   best_time=stats.total)
+                    self.kb.store(improved)
+                    self._current = improved
+            return ScheduledRun(outputs=outputs, stats=stats,
+                                profile=self._current, action=action)
+
+    def _record_run_metrics(self, sct: SCT, stats: ExecutionStats) -> None:
+        """Fold one completed run into counters / metrics / events."""
+        tel = self.telemetry
+        self._counts["runs"] += 1
+        self._counts["retries"] += stats.retries
+        if not stats.ok:
+            self._counts["failed_runs"] += 1
+        if stats.resident:
+            self._counts["resident_handoffs"] += 1
+        tel.metrics.counter("runs_total",
+                            status="ok" if stats.ok else "faulted").inc()
+        if stats.retries:
+            tel.metrics.counter("retries_total").inc(stats.retries)
+            tel.metrics.counter("repartitions_total").inc(stats.retries)
+        tel.metrics.counter(
+            "plan_cache_hits_total" if stats.plan_cache_hit
+            else "plan_cache_misses_total").inc()
+        if stats.resident:
+            tel.metrics.counter("resident_handoffs_total").inc()
+        tel.metrics.counter("merge_bytes_total").inc(stats.merge_bytes)
+        tel.metrics.histogram("class_makespan_seconds",
+                              cls="a").observe(stats.time_a)
+        tel.metrics.histogram("class_makespan_seconds",
+                              cls="b").observe(stats.time_b)
+        tel.metrics.histogram("overhead_seconds").observe(
+            stats.overhead_seconds)
+        for slot, t in zip(self._last_slots, stats.times):
+            tel.metrics.counter("device_busy_seconds_total",
+                                device=slot.device.split("/")[0]).inc(t)
+
+    def counters(self) -> Dict[str, float]:
+        """One namespaced counter dict across the whole pipeline.
+
+        Folds the plan-cache numbers together with scheduler run/retry
+        counts, executor pool reuse and resident handoffs (re-exported
+        through :meth:`Session.counters`)."""
+        out: Dict[str, float] = {
+            f"plan_cache.{k}": v
+            for k, v in self.plan_cache.counters().items()}
+        for k, v in self._counts.items():
+            out[f"scheduler.{k}"] = v
+        ex = self.executor
+        out["executor.pools_created"] = getattr(ex, "pools_created", 0)
+        out["executor.pool_reuses"] = getattr(ex, "pool_reuses", 0)
+        out["health.quarantined"] = len(self.health.quarantined())
+        out["balancer.balance_ops"] = self.balancer.balance_ops
+        out["balancer.unbalanced_runs"] = self.balancer.unbalanced_runs
+        return out
 
     def run_chain(self, scts: Sequence[SCT], arrays: Dict[str, Any]
                   ) -> List[ScheduledRun]:
@@ -312,16 +397,18 @@ class Scheduler:
                   *, resident=None, keep_resident: bool = False
                   ) -> Tuple[Dict[str, Any], ExecutionStats]:
         t0 = time.perf_counter()
-        shapes = {k: tuple(getattr(v, "shape", ()))
-                  for k, v in arrays.items()}
-        if resident is not None:
-            # slot-resident vectors are inputs too: plan over their
-            # global (merged) shapes without materialising them
-            shapes = {**resident.shapes(), **shapes}
-        slots = self._slots(profile)
-        shares = self._per_slot_shares(profile, slots)
-        part, cache_hit = self.plan_cache.partition(sct, shapes, slots,
-                                                    shares)
+        with self.telemetry.tracer.span("plan") as plan_span:
+            shapes = {k: tuple(getattr(v, "shape", ()))
+                      for k, v in arrays.items()}
+            if resident is not None:
+                # slot-resident vectors are inputs too: plan over their
+                # global (merged) shapes without materialising them
+                shapes = {**resident.shapes(), **shapes}
+            slots = self._slots(profile)
+            shares = self._per_slot_shares(profile, slots)
+            part, cache_hit = self.plan_cache.partition(sct, shapes, slots,
+                                                        shares)
+            plan_span.note(cache_hit=cache_hit, slots=len(slots))
         plan_seconds = time.perf_counter() - t0
 
         if getattr(self.executor, "supports_residency", False):

@@ -45,6 +45,7 @@ from repro.core.faults import (ExecutionError, FaultInjector, FaultPolicy,
 from repro.core.knowledge_base import Profile
 from repro.core.skeletons import SCT
 from repro.core.spec import Transfer, Workload
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 #: cache capacity (bytes) of each fission affinity domain — paper Sec. 4.1
 #: hardware (AMD Opteron 6272): 16 KiB L1/core, 2 MiB L2/2 cores,
@@ -104,7 +105,13 @@ class SimulatedExecutor:
                  noise: float = 0.02, compute_outputs: bool = False,
                  cost: Optional[CostModel] = None,
                  injector: Optional[FaultInjector] = None,
-                 policy: FaultPolicy = FaultPolicy()):
+                 policy: FaultPolicy = FaultPolicy(),
+                 telemetry: Optional[Telemetry] = None):
+        self.telemetry = telemetry or NULL_TELEMETRY
+        # virtual simulated-time clock (µs): spans are laid on this
+        # timeline, so the exported trace is deterministic (seeded
+        # jitter only — no wall-clock reads)
+        self._vclock_us = 0.0
         self.devices = {d.name.split("/")[0]: d for d in devices}
         self.noise = noise
         self.rng = np.random.default_rng(seed)
@@ -139,12 +146,15 @@ class SimulatedExecutor:
         n_cpu = max(len(cpu_slots), 1)
         deadline = self.policy.deadline(getattr(profile, "best_time", None))
 
+        tel = self.telemetry
         times = [0.0] * len(part.slots)
         records: List[FaultRecord] = []
         retries = 0
         dead: set = set()
         pending: Dict[int, int] = {j: u for j, u in enumerate(part.units)}
         for attempt in range(self.policy.max_attempts):
+            round_us = self._vclock_us       # virtual start of this round
+            round_max = 0.0
             failed: Dict[int, int] = {}
             for j, units in pending.items():
                 slot = part.slots[j]
@@ -156,29 +166,40 @@ class SimulatedExecutor:
                 if kind == "stall":
                     t += self.injector.stall_seconds
                     if deadline is not None and t > deadline:
-                        records.append(FaultRecord(
+                        rec = FaultRecord(
                             slot=j, device=slot.device,
                             device_type=slot.device_type, kind="timeout",
                             attempt=attempt,
                             message="simulated stall tripped watchdog "
                                     f"({deadline:.3f}s)",
-                            seconds=deadline))
+                            seconds=deadline)
+                        records.append(rec)
                         dead.add(j)
                         failed[j] = units
                         times[j] += deadline
+                        round_max = max(round_max, deadline)
+                        self._observe_slot(slot, units, deadline, attempt,
+                                           round_us, fault=rec)
                         continue
                 if kind == "crash":
                     # the slot dies halfway through its simulated run
-                    records.append(FaultRecord(
+                    rec = FaultRecord(
                         slot=j, device=slot.device,
                         device_type=slot.device_type, kind="crash",
                         attempt=attempt, message="injected crash",
-                        seconds=t * 0.5))
+                        seconds=t * 0.5)
+                    records.append(rec)
                     dead.add(j)
                     failed[j] = units
                     times[j] += t * 0.5
+                    round_max = max(round_max, t * 0.5)
+                    self._observe_slot(slot, units, t * 0.5, attempt,
+                                       round_us, fault=rec)
                     continue
                 times[j] += t
+                round_max = max(round_max, t)
+                self._observe_slot(slot, units, t, attempt, round_us)
+            self._vclock_us = round_us + round_max * 1e6
             lost_units = sum(u for u in failed.values() if u > 0)
             if not lost_units:
                 break
@@ -194,6 +215,8 @@ class SimulatedExecutor:
             counts = split_units(lost_units, len(alive))
             pending = {j: u for j, u in zip(alive, counts) if u}
             retries += 1
+            tel.events.emit("retry.repartition", lost_units=lost_units,
+                            survivors=len(alive), attempt=attempt)
 
         self.last_failures = records
         self.last_retries = retries
@@ -208,6 +231,29 @@ class SimulatedExecutor:
             env = dict(arrays)
             outputs = sct.apply(env)
         return outputs, times
+
+    def _observe_slot(self, slot, units: int, seconds: float, attempt: int,
+                      round_us: float,
+                      fault: Optional[FaultRecord] = None) -> None:
+        """Telemetry for one simulated slot execution.
+
+        Spans are laid on the virtual simulated-time axis (``record``,
+        Chrome ``X`` events, one track per physical device) so the
+        exported trace depends only on the seeded cost model — fully
+        deterministic, no wall-clock reads."""
+        tel = self.telemetry
+        base = slot.device.split("/")[0]
+        tid = list(self.devices).index(base) if base in self.devices else 0
+        tel.tracer.record("slot", round_us, seconds * 1e6, tid=tid,
+                          device=slot.device, units=units, attempt=attempt,
+                          **({"fault": fault.kind} if fault else {}))
+        # per-device busy seconds are accounted once, by the Scheduler,
+        # from stats.times — identical for both executors
+        if fault is not None:
+            tel.metrics.counter("faults_total", kind=fault.kind).inc()
+            tel.events.emit("fault", level="warning", message=fault.message,
+                            device=fault.device, fault_kind=fault.kind,
+                            attempt=fault.attempt, slot=fault.slot)
 
     def last_class_times(self) -> Tuple[float, float]:
         n_a, t = self._last_n_a, self._last_times
