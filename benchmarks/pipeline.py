@@ -1,0 +1,288 @@
+"""Pipeline benchmark: graph-based concurrent submission (JobGraph).
+
+Measures what the graph pipeline buys over the historical blocking
+FCFS dispatch, in two deterministic virtual-time phases plus one
+wall-clock phase:
+
+  * **virtual throughput** — a fan-out JobGraph of K independent nodes
+    with complementary device affinity (half pinned gpu-heavy, half
+    cpu-heavy via KB profiles) on the :class:`SimulatedExecutor`,
+    against the same K nodes forced into a serial chain (the FCFS
+    order).  Virtual makespans are exact — no timer noise — so the
+    speedup is CI-gated at the issue's >1.5x target.
+  * **virtual overlap** — a 3-node fan-out whose spans must share a
+    common instant (three nodes simultaneously in flight on the
+    per-device work queues); CI-gated.
+  * **threaded** — the same fan-out on the real ThreadedExecutor:
+    bit-identical outputs vs. blocking sequential runs (gated), also
+    under an injected per-node fault recovered by graph-level retry
+    (gated), and measured concurrent-vs-serialized wall throughput via
+    ``Session.submit`` (reported, not gated: shared CI runners are too
+    noisy to fail a build on wall-clock ratios).
+
+Emits ``BENCH_pipeline.json`` (with an embedded telemetry metrics
+block via ``benchmarks/report.embed_metrics``).
+
+Run:  PYTHONPATH=src python benchmarks/pipeline.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import (AcceleratorPlatform, DeviceInfo, FaultInjector,
+                        FaultPolicy, HostPlatform, JobGraph, KnowledgeBase,
+                        LoadBalancer, Origin, PlatformConfig, Profile,
+                        Scheduler, Session, Telemetry, ThreadedExecutor,
+                        Workload, kernel, vector)
+from repro.core.simulator import CostModel, SimDevice, SimulatedExecutor
+
+try:
+    from benchmarks.report import embed_metrics
+except ImportError:                     # run as `python benchmarks/...`
+    from report import embed_metrics
+
+# a huge watchdog multiple disables spurious timeout trips on busy CI
+POLICY = FaultPolicy(watchdog_multiple=1e6)
+
+
+def node_kernel(i: int):
+    """One independent graph node; distinct sct-id and output name."""
+    c = np.float32(i + 1)
+    return kernel(lambda x, y, c=c: x * c + y, name=f"node{i}",
+                  inputs=[vector("x"), vector("y")],
+                  outputs=[vector(f"o{i}")])
+
+
+def make_arrays(n: int):
+    return {"x": np.arange(n, dtype=np.float32),
+            "y": np.ones(n, dtype=np.float32)}
+
+
+def make_scheduler(executor, **kw) -> Scheduler:
+    host = HostPlatform(DeviceInfo("cpu0", "cpu", compute_units=4),
+                        topology={"L2": 2, "NO_FISSION": 1})
+    accel = AcceleratorPlatform([DeviceInfo("gpu0", "gpu")], max_overlap=2)
+    kw.setdefault("balancer", LoadBalancer(max_dev=0.0))
+    kw.setdefault("kb", KnowledgeBase())
+    return Scheduler(host=host, accel=accel, executor=executor, **kw)
+
+
+def pin(sched: Scheduler, sct, n: int, share_a: float) -> None:
+    sched.kb.store(Profile(
+        sct_id=sct.unique_id(), workload=Workload((n,)), share_a=share_a,
+        config=PlatformConfig(), best_time=float("inf"),
+        origin=Origin.DERIVED))
+
+
+# ---------------------------------------------------------------------------
+# Virtual phases (deterministic — CI-gated)
+# ---------------------------------------------------------------------------
+
+def virtual_scheduler(*, symmetric: bool) -> Scheduler:
+    """Simulator whose compute dwarfs per-slot dispatch overhead.
+
+    ``symmetric`` gives the CPU the GPU's throughput, so a gpu-heavy
+    and a cpu-heavy node have equal makespans and the two device work
+    queues carry equal totals — the ideal pipelining scenario."""
+    devs = [SimDevice("gpu0", "gpu", flops=1e12),
+            SimDevice("cpu0", "cpu", flops=1e12 if symmetric else 1e11,
+                      cores=4)]
+    sim = SimulatedExecutor(devs, noise=0.0,
+                            cost=CostModel(flops_per_unit=1e6,
+                                           bytes_per_unit=0.0))
+    return make_scheduler(sim)
+
+
+def graph_makespan(handle) -> float:
+    spans = handle.spans().values()
+    return (max(e for _, e in spans) - min(s for s, _ in spans)) / 1e6
+
+
+def bench_virtual_throughput(n: int, k: int) -> dict:
+    """Fan-out of K complementary nodes vs. the same nodes serialised."""
+    scts = [node_kernel(i) for i in range(k)]
+    shares = [0.95 if i % 2 == 0 else 0.05 for i in range(k)]
+
+    # serialized FCFS: a linear chain forces one-at-a-time execution
+    serial = virtual_scheduler(symmetric=True)
+    g_serial = JobGraph()
+    prev = ()
+    for sct, sh in zip(scts, shares):
+        pin(serial, sct, n, sh)
+        prev = (g_serial.add(sct, after=prev),)
+    t_serial = graph_makespan(serial.submit(g_serial, make_arrays(n)))
+
+    # concurrent: the same nodes as a pure fan-out through the Session
+    conc = virtual_scheduler(symmetric=True)
+    g_conc = JobGraph()
+    for sct, sh in zip(scts, shares):
+        pin(conc, sct, n, sh)
+        g_conc.add(sct)
+    with Session(conc) as sess:
+        t_conc = graph_makespan(sess.submit(g_conc, **make_arrays(n)))
+
+    return {"nodes": k, "serialized_makespan_s": t_serial,
+            "concurrent_makespan_s": t_conc,
+            "throughput_gain_x": t_serial / t_conc if t_conc > 0 else 0.0}
+
+
+def bench_virtual_overlap(n: int) -> dict:
+    """Three cpu-heavy nodes: short gpu legs drain while long cpu legs
+    run, so all three nodes are in flight at one instant."""
+    scts = [node_kernel(i) for i in range(3)]
+    sched = virtual_scheduler(symmetric=False)
+    g = JobGraph()
+    for sct in scts:
+        pin(sched, sct, n, 0.1)
+        g.add(sct)
+    with Session(sched) as sess:
+        handle = sess.submit(g, **make_arrays(n))
+    spans = list(handle.spans().values())
+    max_conc = max(sum(1 for (s, e) in spans if s <= t < e)
+                   for (t, _) in spans)
+    return {"nodes": 3, "spans_us": sorted(spans),
+            "max_concurrent_nodes": max_conc}
+
+
+# ---------------------------------------------------------------------------
+# Threaded phase (bit-identity gated; wall throughput reported)
+# ---------------------------------------------------------------------------
+
+def bench_threaded(n: int, k: int, reps: int, telemetry) -> dict:
+    scts = [node_kernel(i) for i in range(k)]
+    arrays = make_arrays(n)
+
+    # blocking FCFS baseline: one sched.run per node, in order
+    seq = make_scheduler(ThreadedExecutor(policy=POLICY))
+    expected = {}
+    for sct in scts:
+        r = seq.run(sct, dict(arrays))
+        expected.update({kk: np.copy(np.asarray(v))
+                         for kk, v in r.outputs.items()})
+    seq.close()
+
+    # concurrent graph execution — bit-identity gate
+    par = make_scheduler(ThreadedExecutor(policy=POLICY),
+                         telemetry=telemetry)
+    g = JobGraph()
+    for sct in scts:
+        g.add(sct)
+    res = par.submit(g, arrays).result(timeout=120)
+    bit_identical = all(
+        np.array_equal(expected[kk], np.asarray(res.outputs[kk]))
+        for kk in expected)
+    par.close()
+
+    # fault-injected per-node retry — bit-identity under recovery
+    inj = FaultInjector(crash_on_call={"gpu0": [1]})
+    flt = make_scheduler(
+        ThreadedExecutor(injector=inj, policy=FaultPolicy(
+            max_attempts=1, watchdog_multiple=1e6)),
+        telemetry=telemetry)
+    g2 = JobGraph()
+    for sct in scts:
+        g2.add(sct)
+    res2 = flt.submit(g2, arrays, retries=2,
+                      retry_backoff=0.01).result(timeout=120)
+    bit_identical_faulted = all(
+        np.array_equal(expected[kk], np.asarray(res2.outputs[kk]))
+        for kk in expected)
+    node_retries = int(flt.counters()["scheduler.failed_runs"])
+    flt.close()
+
+    # wall-clock throughput: concurrent admission vs. serialized FCFS
+    def timed(max_inflight: int) -> float:
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        with Session(sched, max_inflight=max_inflight) as sess:
+            for sct in scts:            # warm pools, caches, KB
+                gw = JobGraph()
+                gw.add(sct)
+                sess.submit(gw, **arrays).result(timeout=120)
+            t0 = time.perf_counter()
+            handles = []
+            for sct in scts:
+                gr = JobGraph()
+                gr.add(sct)
+                handles.append(sess.submit(gr, **arrays))
+            sess.gather(*handles, timeout=120)
+            return time.perf_counter() - t0
+
+    serialized = statistics.median(timed(1) for _ in range(reps))
+    concurrent = statistics.median(timed(k) for _ in range(reps))
+
+    return {"nodes": k, "bit_identical": bit_identical,
+            "bit_identical_faulted": bit_identical_faulted,
+            "node_retries": node_retries,
+            "serialized_wall_s": serialized,
+            "concurrent_wall_s": concurrent,
+            "wall_throughput_gain_x": (serialized / concurrent
+                                       if concurrent > 0 else 0.0)}
+
+
+# ---------------------------------------------------------------------------
+
+def bench(smoke: bool) -> dict:
+    telemetry = Telemetry()
+    result = {
+        "bench": "pipeline", "smoke": smoke, "n": ARGS.n,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "virtual_throughput": bench_virtual_throughput(4096, k=6),
+        "virtual_overlap": bench_virtual_overlap(4096),
+        "threaded": bench_threaded(ARGS.n, k=4,
+                                   reps=3 if smoke else 7,
+                                   telemetry=telemetry),
+    }
+    return embed_metrics(result, telemetry)
+
+
+def check(result) -> int:
+    failures = []
+    gain = result["virtual_throughput"]["throughput_gain_x"]
+    if gain <= 1.5:
+        failures.append(
+            f"virtual concurrent throughput gain {gain:.2f}x <= 1.5x")
+    conc = result["virtual_overlap"]["max_concurrent_nodes"]
+    if conc < 3:
+        failures.append(
+            f"only {conc} nodes simultaneously in flight (need >= 3)")
+    if not result["threaded"]["bit_identical"]:
+        failures.append("graph outputs differ from blocking FCFS runs")
+    if not result["threaded"]["bit_identical_faulted"]:
+        failures.append("fault-injected graph outputs differ from FCFS")
+    if result["threaded"]["node_retries"] < 1:
+        failures.append("fault injection did not exercise per-node retry")
+    for f in failures:
+        print(f"CHECK FAILED: {f}")
+    return 1 if failures else 0
+
+
+def main():
+    global ARGS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload / few reps (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if acceptance gates regress")
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--n", type=int, default=None,
+                    help="vector length (default: 1<<18 smoke, 1<<20 full)")
+    ARGS = ap.parse_args()
+    if ARGS.n is None:
+        ARGS.n = (1 << 18) if ARGS.smoke else (1 << 20)
+
+    result = bench(ARGS.smoke)
+    with open(ARGS.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"wrote {ARGS.out}")
+    if ARGS.check:
+        raise SystemExit(check(result))
+
+
+if __name__ == "__main__":
+    main()

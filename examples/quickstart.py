@@ -11,8 +11,8 @@ online — exactly the Fig. 4 decision workflow.
 import numpy as np
 
 from repro.core import (AcceleratorPlatform, DeviceInfo, HostPlatform,
-                        KnowledgeBase, Pipeline, Scheduler, Session,
-                        ThreadedExecutor, kernel, scalar, vector)
+                        JobGraph, KnowledgeBase, Pipeline, Scheduler,
+                        Session, ThreadedExecutor, kernel, scalar, vector)
 
 
 def main():
@@ -60,6 +60,25 @@ def main():
                       x=x2).get()
     np.testing.assert_allclose(run.outputs["y"], 3 * x2 + 0.5)
     print(f"new workload: action={run.action} (KB size={len(sched.kb)})")
+
+    # 6. Fan-out: independent computations as one JobGraph — nodes with
+    #    no mutual dependencies overlap on the per-device work queues
+    #    (docs/architecture.md).
+    square = kernel(lambda x: x * x, name="square",
+                    inputs=[vector("x")], outputs=[vector("sq")])
+    negate = kernel(lambda x: -x, name="negate",
+                    inputs=[vector("x")], outputs=[vector("neg")])
+    g = JobGraph()
+    g.add(square)
+    g.add(negate)
+    g.add(sct)                       # the pipeline rides along too
+    handle = session.submit(g, a=np.float32(2.0), b=np.float32(1.0), x=x)
+    result = handle.result(timeout=60)
+    np.testing.assert_allclose(result.outputs["sq"], x * x)
+    np.testing.assert_allclose(result.outputs["neg"], -x)
+    np.testing.assert_allclose(result.outputs["y"], 2 * x + 1)
+    print(f"graph fan-out: {len(result.order)} nodes, "
+          f"states={set(handle.status().values())}")
     session.shutdown()
     print("quickstart OK")
 

@@ -21,8 +21,10 @@ from repro.core.decomposition import (ConcretePartitioning, DecompositionError,
 from repro.core.distribution import (AdaptiveBinarySearch, Distribution,
                                      WorkloadDistributionGenerator,
                                      balance_until_stable, run_binary_search)
-from repro.core.executor import (Future, ResidentPartition, Session,
-                                 ThreadedExecutor)
+from repro.core.executor import (ExecResult, Future, ResidentPartition,
+                                 Session, ThreadedExecutor)
+from repro.core.graph import (GraphDriver, GraphError, GraphHandle,
+                              GraphResult, JobGraph, JobNode)
 from repro.core.faults import (DeviceHealth, ExecutionError, FaultInjector,
                                FaultPolicy, FaultRecord, PartitionLost,
                                SlotFailure, SlotTimeout)

@@ -75,6 +75,7 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -83,6 +84,7 @@ import numpy as np
 from repro.core.decomposition import ConcretePartitioning
 from repro.core.faults import (ExecutionError, FaultInjector, FaultPolicy,
                                FaultRecord, InjectedFault, split_units)
+from repro.core.graph import GraphHandle, GraphResult, JobGraph
 from repro.core.knowledge_base import Profile
 from repro.core.skeletons import SCT, PartitionInfo
 from repro.core.spec import ArgSpec, MergeFn, Transfer, Workload
@@ -95,6 +97,27 @@ def output_spec(sct: SCT, name: str) -> Optional[ArgSpec]:
             if a.name == name:
                 return a
     return None
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """Everything one ``execute`` call produced, as a per-call value.
+
+    Concurrent graph nodes share one executor, so per-call results must
+    travel with the call instead of through mutable ``last_*`` fields
+    (which remain, updated by :meth:`ThreadedExecutor.execute`, for
+    sequential callers and older integrations).
+    """
+
+    outputs: Dict[str, Any]
+    times: List[float]                      # per-slot busy seconds
+    failures: List[FaultRecord]
+    retries: int
+    timing: Dict[str, float]                # pool/compute/merge/dispatch
+    merge_bytes: int
+    direct_bytes: int
+    resident: Optional["ResidentPartition"]
+    n_a: int                                # accelerator-class slot count
 
 
 @dataclasses.dataclass
@@ -276,16 +299,25 @@ class ThreadedExecutor:
         self.pool_reuses: int = 0
         self._pool: Optional[cf.ThreadPoolExecutor] = None
         self._pool_size: int = 0
-        self._pool_seconds: float = 0.0
+        self._queues: Dict[str, cf.ThreadPoolExecutor] = {}
+        self._queue_lock = threading.Lock()
+        self._buf_lock = threading.Lock()
+        self._inuse: set = set()            # id() of buffers leased to a run
         self._buffers: Dict[Tuple[str, Tuple[int, ...], str], np.ndarray] = {}
         self._out_shapes: Dict[Tuple[str, str],
                                Tuple[Tuple[int, ...], np.dtype]] = {}
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
-        """Tear down the persistent pool and drop reusable buffers."""
+        """Tear down pools / work queues and drop reusable buffers.
+
+        Idempotent: a second ``close`` (double ``Session.shutdown``, a
+        context-manager exit after an explicit shutdown) is a no-op."""
         self._retire_pool()
-        self._buffers = {}
+        self._retire_queues()
+        with self._buf_lock:
+            self._buffers = {}
+            self._inuse = set()
         self._out_shapes = {}
 
     def _retire_pool(self) -> None:
@@ -296,8 +328,17 @@ class ThreadedExecutor:
             self._pool = None
             self._pool_size = 0
 
+    def _retire_queues(self, devices: Optional[Sequence[str]] = None) -> None:
+        """Retire all per-device work queues, or just the given devices
+        (a hung slot taints only its own device's queue)."""
+        with self._queue_lock:
+            names = list(self._queues) if devices is None \
+                else [d for d in devices if d in self._queues]
+            doomed = [self._queues.pop(d) for d in names]
+        for q in doomed:
+            q.shutdown(wait=False, cancel_futures=True)
+
     def _acquire_pool(self, n: int) -> cf.ThreadPoolExecutor:
-        t0 = time.perf_counter()
         with self.telemetry.tracer.span("pool", workers=n) as sp:
             if self._pool is not None and self._pool_size < n:
                 self._retire_pool()
@@ -310,8 +351,33 @@ class ThreadedExecutor:
             else:
                 self.pool_reuses += 1
                 self.telemetry.metrics.counter("pool_reuses_total").inc()
-        self._pool_seconds += time.perf_counter() - t0
         return self._pool
+
+    def _acquire_queues(self, devices: Sequence[str]
+                        ) -> Dict[str, cf.ThreadPoolExecutor]:
+        """Per-device work queues (paper Fig. 2): one single-worker pool
+        per execution-slot device, shared by every concurrent run.  Two
+        segments bound to the same device serialise in its queue;
+        segments on disjoint devices genuinely overlap — including
+        segments of *different* graph nodes."""
+        with self.telemetry.tracer.span("pool", workers=len(devices)) as sp:
+            created = False
+            with self._queue_lock:
+                for d in devices:
+                    if d not in self._queues:
+                        self._queues[d] = cf.ThreadPoolExecutor(
+                            max_workers=1,
+                            thread_name_prefix=f"wq-{d.replace('/', '-')}")
+                        created = True
+                qmap = {d: self._queues[d] for d in devices}
+            if created:
+                self.pools_created += 1
+                self.telemetry.metrics.counter("pools_created_total").inc()
+                sp.note(created=True)
+            else:
+                self.pool_reuses += 1
+                self.telemetry.metrics.counter("pool_reuses_total").inc()
+        return qmap
 
     # -- Scheduler interface -------------------------------------------------
     def execute(self, sct: SCT, part: ConcretePartitioning,
@@ -319,24 +385,67 @@ class ThreadedExecutor:
                 resident: Optional[ResidentPartition] = None,
                 keep_resident: bool = False
                 ) -> Tuple[Dict[str, Any], List[float]]:
+        """Sequential-caller facade: runs and publishes the ``last_*``
+        observation fields (not safe under concurrent callers — those go
+        through :meth:`execute_result`)."""
+        res = self.execute_result(sct, part, arrays, profile,
+                                  resident=resident,
+                                  keep_resident=keep_resident)
+        self._last_times = res.times
+        self._last_n_a = res.n_a
+        self.last_failures = res.failures
+        self.last_retries = res.retries
+        self.last_timing = res.timing
+        self.last_merge_bytes = res.merge_bytes
+        self.last_direct_bytes = res.direct_bytes
+        self.last_resident = res.resident
+        return res.outputs, res.times
+
+    def execute_result(self, sct: SCT, part: ConcretePartitioning,
+                       arrays: Dict[str, Any], profile: Profile, *,
+                       resident: Optional[ResidentPartition] = None,
+                       keep_resident: bool = False) -> ExecResult:
+        """Execute one partitioned run and return a per-call result.
+
+        Thread-safe: concurrent graph nodes share the per-device work
+        queues and the buffer pool (leased per call), and nothing about
+        this call is observed through shared mutable state."""
         with self.telemetry.tracer.span(
                 "dispatch", sct=sct.unique_id(), slots=len(part.slots),
                 keep_resident=keep_resident) as sp:
-            outputs, times = self._execute(
+            res = self._execute(
                 sct, part, arrays, profile, resident=resident,
                 keep_resident=keep_resident)
-            sp.note(retries=self.last_retries,
-                    merge_bytes=self.last_merge_bytes,
-                    resident=self.last_resident is not None)
-            return outputs, times
+            sp.note(retries=res.retries,
+                    merge_bytes=res.merge_bytes,
+                    resident=res.resident is not None)
+            return res
 
     def _execute(self, sct: SCT, part: ConcretePartitioning,
                  arrays: Dict[str, Any], profile: Profile, *,
                  resident: Optional[ResidentPartition] = None,
-                 keep_resident: bool = False
-                 ) -> Tuple[Dict[str, Any], List[float]]:
+                 keep_resident: bool = False) -> ExecResult:
+        leases: List[np.ndarray] = []   # buffers leased to this call
+        try:
+            return self._execute_leased(sct, part, arrays, profile, leases,
+                                        resident=resident,
+                                        keep_resident=keep_resident)
+        finally:
+            # end of the run releases its buffer leases: the *next* run may
+            # overwrite the returned arrays (the documented aliasing
+            # contract), but a *concurrent* run never shares them
+            if leases:
+                with self._buf_lock:
+                    for b in leases:
+                        self._inuse.discard(id(b))
+
+    def _execute_leased(self, sct: SCT, part: ConcretePartitioning,
+                        arrays: Dict[str, Any], profile: Profile,
+                        leases: List[np.ndarray], *,
+                        resident: Optional[ResidentPartition] = None,
+                        keep_resident: bool = False) -> ExecResult:
         t_run0 = time.perf_counter()
-        self._pool_seconds = 0.0
+        pool_sec = [0.0]                # mutable: charged by _run_attempt
         merge_bytes = 0
         deadline = self.policy.deadline(getattr(profile, "best_time", None))
 
@@ -357,7 +466,7 @@ class ThreadedExecutor:
 
         targets: Dict[str, _OutputTarget] = {}
         if self.inplace_merge and not keep_resident:
-            targets = self._output_targets(sct, part)
+            targets = self._output_targets(sct, part, leases)
 
         records: List[FaultRecord] = []
         retries = 0
@@ -374,7 +483,7 @@ class ThreadedExecutor:
                                  segments=len(pending)) as att_span:
                 outcomes = self._run_attempt(sct, part, arrays, pending,
                                              deadline, attempt, resident,
-                                             targets)
+                                             targets, pool_sec)
                 attempts_seconds += time.perf_counter() - t_a0
                 failed: List[_Segment] = []
                 for seg, res in zip(pending, outcomes):
@@ -423,7 +532,8 @@ class ThreadedExecutor:
         if any(r.kind == "timeout" for r in records):
             # an abandoned hung thread may still write into the current
             # buffers — retire them so later runs get untainted memory
-            self._buffers = {}
+            with self._buf_lock:
+                self._buffers = {}
             tel.events.emit("buffers.dropped", level="warning",
                             message="output buffers retired after a slot "
                                     "timeout (hung-thread containment)")
@@ -431,15 +541,17 @@ class ThreadedExecutor:
         done.sort(key=lambda sr: sr[0].start)
         clean = retries == 0 and not records
         t_m0 = time.perf_counter()
+        resident_out: Optional[ResidentPartition] = None
+        direct_bytes = 0
         if keep_resident and clean:
             with tel.tracer.span("resident-handoff", segments=len(done)):
-                self.last_resident = self._make_resident(
+                resident_out = self._make_resident(
                     sct, part, done, resident, inherited_extras)
             outputs: Dict[str, Any] = {}
         else:
-            self.last_resident = None
             with tel.tracer.span("merge") as merge_span:
-                outputs, copied = self._merge(sct, part, done, targets)
+                outputs, copied, direct_bytes = self._merge(
+                    sct, part, done, targets, leases)
                 merge_span.note(merge_bytes=copied)
             merge_bytes += copied
             if inherited_extras and keep_resident:
@@ -448,29 +560,30 @@ class ThreadedExecutor:
         merge_seconds = time.perf_counter() - t_m0
 
         times = per_slot_seconds
-        self._last_times = times
-        self._last_n_a = sum(1 for s in part.slots if s.device_type != "cpu")
-        self.last_failures = records
-        self.last_retries = retries
-        self.last_merge_bytes = merge_bytes
         total = time.perf_counter() - t_run0
-        compute = max(attempts_seconds - self._pool_seconds, 0.0)
-        self.last_timing = {
-            "pool": self._pool_seconds,
+        compute = max(attempts_seconds - pool_sec[0], 0.0)
+        timing = {
+            "pool": pool_sec[0],
             "compute": compute,
             "merge": merge_seconds,
             "dispatch": max(total - attempts_seconds - merge_seconds, 0.0),
         }
-        return outputs, times
+        return ExecResult(
+            outputs=outputs, times=times, failures=records, retries=retries,
+            timing=timing, merge_bytes=merge_bytes,
+            direct_bytes=direct_bytes, resident=resident_out,
+            n_a=sum(1 for s in part.slots if s.device_type != "cpu"))
 
     def _run_attempt(self, sct: SCT, part: ConcretePartitioning,
                      arrays: Dict[str, Any], segments: Sequence[_Segment],
                      deadline: Optional[float], attempt: int,
                      resident: Optional[ResidentPartition] = None,
-                     targets: Optional[Dict[str, _OutputTarget]] = None
+                     targets: Optional[Dict[str, _OutputTarget]] = None,
+                     pool_sec: Optional[List[float]] = None
                      ) -> List[Union[_SlotResult, FaultRecord]]:
         """Run one round of segments concurrently, containing all faults."""
         targets = targets or {}
+        pool_sec = pool_sec if pool_sec is not None else [0.0]
 
         def work(seg: _Segment) -> Union[_SlotResult, FaultRecord]:
             slot = part.slots[seg.slot]
@@ -506,17 +619,30 @@ class ThreadedExecutor:
         if deadline is None and len(segments) == 1:
             return [work(segments[0])]
 
-        nw = self.max_workers or max(len(segments), 1)
-        if self.persistent_pool:
-            pool = self._acquire_pool(nw)
+        # three dispatch modes: per-device work queues (default), one
+        # shared persistent pool (explicit max_workers), per-run pool
+        # (persistent_pool=False, the historical baseline)
+        use_queues = self.persistent_pool and self.max_workers is None
+        t0 = time.perf_counter()
+        pool: Optional[cf.ThreadPoolExecutor] = None
+        if use_queues:
+            qmap = self._acquire_queues(
+                list(dict.fromkeys(part.slots[seg.slot].device
+                                   for seg in segments)))
+        elif self.persistent_pool:
+            pool = self._acquire_pool(self.max_workers)
         else:
-            t0 = time.perf_counter()
-            pool = cf.ThreadPoolExecutor(max_workers=nw)
-            self._pool_seconds += time.perf_counter() - t0
+            pool = cf.ThreadPoolExecutor(
+                max_workers=self.max_workers or max(len(segments), 1))
+        pool_sec[0] += time.perf_counter() - t0
         hung: set = set()
         try:
-            futs = {pool.submit(work, seg): i
-                    for i, seg in enumerate(segments)}
+            if use_queues:
+                futs = {qmap[part.slots[seg.slot].device].submit(work, seg): i
+                        for i, seg in enumerate(segments)}
+            else:
+                futs = {pool.submit(work, seg): i
+                        for i, seg in enumerate(segments)}
             done_f, hung = cf.wait(futs, timeout=deadline)
             outcomes: List[Union[_SlotResult, FaultRecord]] = \
                 [None] * len(segments)  # type: ignore[list-item]
@@ -534,14 +660,18 @@ class ThreadedExecutor:
                     seconds=float(deadline or 0.0))
             return outcomes
         finally:
-            if not self.persistent_pool or hung:
-                # abandon hung threads instead of joining them (a stalled
-                # slot must not block the retry round); a tainted
-                # persistent pool is recreated on next acquisition
-                if self.persistent_pool:
-                    self._retire_pool()
-                else:
-                    pool.shutdown(wait=False, cancel_futures=True)
+            # abandon hung threads instead of joining them (a stalled
+            # slot must not block the retry round); a tainted persistent
+            # pool / device queue is recreated on next acquisition
+            if use_queues:
+                if hung:
+                    self._retire_queues(
+                        {part.slots[segments[futs[f]].slot].device
+                         for f in hung})
+            elif not self.persistent_pool:
+                pool.shutdown(wait=False, cancel_futures=True)
+            elif hung:
+                self._retire_pool()
 
     def _segment_env(self, part: ConcretePartitioning, arrays: Dict[str, Any],
                      seg: _Segment,
@@ -613,16 +743,31 @@ class ThreadedExecutor:
         return None
 
     def _get_buffer(self, name: str, shape: Tuple[int, ...],
-                    dtype: np.dtype) -> np.ndarray:
+                    dtype: np.dtype, leases: List[np.ndarray]) -> np.ndarray:
+        """Lease a reusable output buffer to the calling run.
+
+        A buffer leased to a still-running concurrent call is never
+        handed out again; the requester gets a fresh allocation instead
+        (stored as the new cached buffer).  Leases are released at the
+        end of ``_execute`` — preserving the sequential aliasing
+        contract (the next run may overwrite returned arrays) while
+        overlapping runs stay isolated."""
         key = (name, tuple(shape), np.dtype(dtype).str)
-        buf = self._buffers.get(key)
-        if buf is None:
-            buf = np.empty(shape, dtype)
+        with self._buf_lock:
+            buf = self._buffers.get(key)
+            if buf is not None and id(buf) in self._inuse:
+                buf = None              # leased to a concurrent run
+            if buf is None:
+                buf = np.empty(shape, dtype)
+                if self.reuse_buffers:
+                    self._buffers[key] = buf
             if self.reuse_buffers:
-                self._buffers[key] = buf
+                self._inuse.add(id(buf))
+                leases.append(buf)
         return buf
 
-    def _output_targets(self, sct: SCT, part: ConcretePartitioning
+    def _output_targets(self, sct: SCT, part: ConcretePartitioning,
+                        leases: List[np.ndarray]
                         ) -> Dict[str, _OutputTarget]:
         """Preallocated destinations for outputs whose shape is known.
 
@@ -646,7 +791,7 @@ class ThreadedExecutor:
                     shape[axis] != part.plan.domain_units * epu:
                 continue        # workload changed: re-learn on this run
             targets[name] = _OutputTarget(
-                buffer=self._get_buffer(name, shape, dtype),
+                buffer=self._get_buffer(name, shape, dtype, leases),
                 axis=axis, epu=epu)
         return targets
 
@@ -677,9 +822,11 @@ class ThreadedExecutor:
     # -- merging ---------------------------------------------------------------
     def _merge(self, sct: SCT, part: ConcretePartitioning,
                done: Sequence[Tuple[_Segment, _SlotResult]],
-               targets: Optional[Dict[str, _OutputTarget]] = None
-               ) -> Tuple[Dict[str, Any], int]:
-        """Merge per-segment outputs; returns (outputs, bytes copied).
+               targets: Optional[Dict[str, _OutputTarget]] = None,
+               leases: Optional[List[np.ndarray]] = None
+               ) -> Tuple[Dict[str, Any], int, int]:
+        """Merge per-segment outputs; returns
+        (outputs, bytes copied, bytes direct-written).
 
         Precedence per output name (documented contract):
           1. a user-supplied merge function (``self.merges``) — honoured
@@ -690,6 +837,7 @@ class ThreadedExecutor:
           3. the first slot's value (COPY / replicated / scalar outputs).
         """
         targets = targets or {}
+        leases = leases if leases is not None else []
         merged: Dict[str, Any] = {}
         bytes_copied = 0
         direct_bytes = 0
@@ -715,17 +863,17 @@ class ThreadedExecutor:
                 bytes_copied += merged[name].nbytes
                 continue
             out, copied, direct = self._assemble(
-                name, axis, pieces, targets.get(name))
+                name, axis, pieces, targets.get(name), leases)
             merged[name] = out
             bytes_copied += copied
             direct_bytes += direct
             self._out_shapes[(sid, name)] = (tuple(out.shape), out.dtype)
-        self.last_direct_bytes = direct_bytes
-        return merged, bytes_copied
+        return merged, bytes_copied, direct_bytes
 
     def _assemble(self, name: str, axis: int,
                   pieces: Sequence[Tuple[_Segment, _SlotResult]],
-                  target: Optional[_OutputTarget]
+                  target: Optional[_OutputTarget],
+                  leases: List[np.ndarray]
                   ) -> Tuple[np.ndarray, int, int]:
         """In-place assembly of one partitionable output.
 
@@ -760,7 +908,7 @@ class ThreadedExecutor:
         shape[axis] = sum(sizes)
         dtype = np.result_type(*[getattr(p, "dtype", None)
                                  or np.asarray(p).dtype for p in parts])
-        buf = self._get_buffer(name, tuple(shape), dtype)
+        buf = self._get_buffer(name, tuple(shape), dtype, leases)
         off = 0
         copied = 0
         for p, s in zip(parts, sizes):
@@ -874,16 +1022,42 @@ class Future:
         return self._inner.done()
 
 
+class _HandleFuture:
+    """``concurrent.futures``-shaped view of one :class:`GraphHandle`
+    node (duck-typed inner future for :class:`Future`)."""
+
+    def __init__(self, handle: GraphHandle, extract: Callable[..., Any]):
+        self._handle = handle
+        self._extract = extract
+
+    def result(self, timeout: Optional[float] = None):
+        self._handle.result(timeout)    # raises on failure / wait timeout
+        return self._extract(self._handle)
+
+    def done(self) -> bool:
+        return self._handle.done()
+
+
 class Session:
-    """User-facing facade: SCT.run() -> Future over a Scheduler.
+    """User-facing facade: SCT.run()/submit() -> Future over a Scheduler.
 
     Usable as a context manager (``with Session(sched) as s: ...`` shuts
-    the request queue down on exit).  ``run`` accepts a request-level
-    ``deadline`` (seconds, enforced across retries and by ``Future.get``)
-    and ``retries`` with exponential backoff on terminal
-    :class:`~repro.core.faults.ExecutionError`.  ``shutdown`` also closes
-    the scheduler's executor (persistent worker pool, reusable output
-    buffers — see :class:`ThreadedExecutor`).
+    the request queue down on exit).  Requests are admitted concurrently
+    — :meth:`submit` takes a whole :class:`~repro.core.graph.JobGraph`
+    and returns a :class:`~repro.core.graph.GraphHandle`; ``run`` and
+    ``run_chain`` are thin wrappers over one-node / linear graphs and
+    keep their historical signatures and ``Future`` semantics.  At most
+    ``max_inflight`` graphs may be unsettled at once; beyond that,
+    ``submit`` blocks (backpressure) until one completes.
+
+    ``run`` accepts a request-level ``deadline`` (seconds, enforced
+    across retries and by ``Future.get``) and ``retries`` with
+    exponential backoff on terminal
+    :class:`~repro.core.faults.ExecutionError`; each backoff pause is
+    capped by the remaining deadline.  ``shutdown`` drains in-flight
+    requests, then closes the scheduler's graph pool and executor
+    (persistent work queues, reusable output buffers — see
+    :class:`ThreadedExecutor`); it is idempotent.
 
     ``telemetry`` installs a shared :class:`~repro.core.telemetry.Telemetry`
     bundle across the scheduler, executor, health tracker and balancer;
@@ -893,13 +1067,18 @@ class Session:
     """
 
     def __init__(self, scheduler, *,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 max_inflight: int = 8):
         self.scheduler = scheduler
         if telemetry is not None and hasattr(scheduler, "attach_telemetry"):
             scheduler.attach_telemetry(telemetry)
         self.telemetry = getattr(scheduler, "telemetry", None) \
             or telemetry or NULL_TELEMETRY
-        self._pool = cf.ThreadPoolExecutor(max_workers=1)  # FCFS batch queue
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.max_inflight = max_inflight
+        self._inflight = threading.BoundedSemaphore(max_inflight)
+        self._closed = False
 
     def __enter__(self) -> "Session":
         return self
@@ -907,36 +1086,56 @@ class Session:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.shutdown()
 
+    # -- graph pipeline -------------------------------------------------------
+    def submit(self, graph: JobGraph, *, deadline: Optional[float] = None,
+               retries: int = 0, retry_backoff: float = 0.05,
+               **arrays) -> GraphHandle:
+        """Submit a JobGraph for concurrent execution; returns its handle.
+
+        Blocks while ``max_inflight`` earlier submissions are still
+        unsettled (backpressure); per-node ``retries`` / ``deadline``
+        semantics match :meth:`run`."""
+        if self._closed:
+            raise RuntimeError("session is shut down")
+        self._inflight.acquire()
+        try:
+            handle = self.scheduler.submit(
+                graph, arrays, deadline=deadline, retries=retries,
+                retry_backoff=retry_backoff)
+        except BaseException:
+            self._inflight.release()
+            raise
+        handle.add_done_callback(lambda _h: self._inflight.release())
+        return handle
+
+    def gather(self, *handles: GraphHandle,
+               timeout: Optional[float] = None) -> List[GraphResult]:
+        """Block for a set of submitted graphs; returns their results in
+        argument order (raising the first failure encountered)."""
+        return [h.result(timeout) for h in handles]
+
     def run(self, sct: SCT, *, deadline: Optional[float] = None,
             retries: int = 0, retry_backoff: float = 0.05,
             **arrays) -> Future:
-        def attempt_loop():
-            t0 = time.monotonic()
-            last: Optional[ExecutionError] = None
-            for k in range(retries + 1):
-                if deadline is not None and time.monotonic() - t0 > deadline:
-                    raise ExecutionError(
-                        f"request deadline {deadline}s exceeded after "
-                        f"{k} attempts",
-                        getattr(last, "records", []), k)
-                try:
-                    return self.scheduler.run(sct, arrays)
-                except ExecutionError as e:
-                    last = e
-                    if k == retries:
-                        raise
-                    time.sleep(retry_backoff * (2 ** k))
-            raise last  # pragma: no cover — loop always returns or raises
-
-        return Future(self._pool.submit(attempt_loop), deadline=deadline)
+        graph = JobGraph()
+        name = graph.add(sct)
+        handle = self.submit(graph, deadline=deadline, retries=retries,
+                             retry_backoff=retry_backoff, **arrays)
+        return Future(_HandleFuture(handle, lambda h: h.runs[name]),
+                      deadline=deadline)
 
     def run_chain(self, scts: Sequence[SCT], *, deadline: Optional[float] = None,
-                  **arrays) -> Future:
+                  retries: int = 0, **arrays) -> Future:
         """Asynchronously run a compound SCT chain with partitioned
-        residency between steps (see ``Scheduler.run_chain``)."""
-        def chain():
-            return self.scheduler.run_chain(list(scts), arrays)
-        return Future(self._pool.submit(chain), deadline=deadline)
+        residency between steps (a linear ``JobGraph``: residency flows
+        along its chain edges exactly as in ``Scheduler.run_chain``)."""
+        graph = JobGraph()
+        names = graph.add_chain(list(scts))
+        handle = self.submit(graph, deadline=deadline, retries=retries,
+                             **arrays)
+        return Future(
+            _HandleFuture(handle, lambda h: [h.runs[n] for n in names]),
+            deadline=deadline)
 
     # -- observability --------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
@@ -961,8 +1160,18 @@ class Session:
         return self.telemetry.export_trace(path)
 
     def shutdown(self) -> None:
-        self._pool.shutdown(wait=True)
-        close = getattr(getattr(self.scheduler, "executor", None),
-                        "close", None)
+        """Drain in-flight graphs and release every execution resource.
+
+        Idempotent — repeated calls (or a context-manager exit after an
+        explicit shutdown) are no-ops."""
+        if self._closed:
+            return
+        self._closed = True
+        close = getattr(self.scheduler, "close", None)
         if close is not None:
-            close()
+            close()                     # drains, then closes the executor
+            return
+        exclose = getattr(getattr(self.scheduler, "executor", None),
+                          "close", None)
+        if exclose is not None:
+            exclose()

@@ -256,6 +256,9 @@ class DeviceHealth:
         self.version = 0                # bumped on quarantine/reinstatement
         self.telemetry = NULL_TELEMETRY
         self._entries: Dict[str, _HealthEntry] = {}
+        # concurrent graph nodes observe health from multiple threads;
+        # RLock keeps the read-modify-write transitions atomic
+        self._lock = threading.RLock()
 
     def _entry(self, device: str) -> _HealthEntry:
         return self._entries.setdefault(device, _HealthEntry())
@@ -263,7 +266,8 @@ class DeviceHealth:
     # -- observation ---------------------------------------------------------
     def tick(self) -> None:
         """Advance the run clock (one scheduled execution)."""
-        self.runs += 1
+        with self._lock:
+            self.runs += 1
 
     def record_failure(self, device: str) -> bool:
         """Register one slot fault; True if the device is now quarantined.
@@ -273,63 +277,72 @@ class DeviceHealth:
         forwards to the ``repro.telemetry`` stdlib logger even when
         telemetry is disabled), carrying the device identity and the
         consecutive-failure count that tripped the threshold."""
-        e = self._entry(device)
-        e.consecutive_failures += 1
-        e.total_failures += 1
-        self.telemetry.metrics.counter("device_failures_total",
-                                       device=device).inc()
-        if e.consecutive_failures >= self.quarantine_after:
-            if e.quarantined_at < 0:
-                self.version += 1       # slot set changed: plans go stale
-                self.telemetry.metrics.counter("quarantines_total").inc()
-                self.telemetry.events.emit(
-                    "health.quarantined", level="warning",
-                    message=f"device {device} quarantined after "
-                            f"{e.consecutive_failures} consecutive failures",
-                    device=device,
-                    consecutive_failures=e.consecutive_failures,
-                    run=self.runs)
-            e.quarantined_at = self.runs
-            return True
-        return False
+        with self._lock:
+            e = self._entry(device)
+            e.consecutive_failures += 1
+            e.total_failures += 1
+            self.telemetry.metrics.counter("device_failures_total",
+                                           device=device).inc()
+            if e.consecutive_failures >= self.quarantine_after:
+                if e.quarantined_at < 0:
+                    self.version += 1   # slot set changed: plans go stale
+                    self.telemetry.metrics.counter("quarantines_total").inc()
+                    self.telemetry.events.emit(
+                        "health.quarantined", level="warning",
+                        message=f"device {device} quarantined after "
+                                f"{e.consecutive_failures} "
+                                "consecutive failures",
+                        device=device,
+                        consecutive_failures=e.consecutive_failures,
+                        run=self.runs)
+                e.quarantined_at = self.runs
+                return True
+            return False
 
     def record_success(self, device: str) -> None:
-        e = self._entry(device)
-        was_quarantined = e.quarantined_at >= 0
-        e.consecutive_failures = 0
-        e.total_successes += 1
-        if was_quarantined:
-            self.version += 1           # reinstatement: slot set changed
-            self.telemetry.metrics.counter("reinstatements_total").inc()
-            self.telemetry.events.emit(
-                "health.reinstated", level="warning",
-                message=f"device {device} reinstated after a clean "
-                        "probe run",
-                device=device, run=self.runs,
-                total_failures=e.total_failures)
-        e.quarantined_at = -1           # clean probe run -> reinstated
+        with self._lock:
+            e = self._entry(device)
+            was_quarantined = e.quarantined_at >= 0
+            e.consecutive_failures = 0
+            e.total_successes += 1
+            if was_quarantined:
+                self.version += 1       # reinstatement: slot set changed
+                self.telemetry.metrics.counter("reinstatements_total").inc()
+                self.telemetry.events.emit(
+                    "health.reinstated", level="warning",
+                    message=f"device {device} reinstated after a clean "
+                            "probe run",
+                    device=device, run=self.runs,
+                    total_failures=e.total_failures)
+            e.quarantined_at = -1       # clean probe run -> reinstated
 
     # -- queries -------------------------------------------------------------
     def is_quarantined(self, device: str) -> bool:
-        e = self._entries.get(device)
-        return bool(e and e.quarantined_at >= 0)
+        with self._lock:
+            e = self._entries.get(device)
+            return bool(e and e.quarantined_at >= 0)
 
     def is_probing(self, device: str) -> bool:
         """Quarantined device due for a probationary probe run."""
-        e = self._entries.get(device)
-        return bool(e and e.quarantined_at >= 0
-                    and self.runs - e.quarantined_at >= self.probe_after)
+        with self._lock:
+            e = self._entries.get(device)
+            return bool(e and e.quarantined_at >= 0
+                        and self.runs - e.quarantined_at >= self.probe_after)
 
     def usable(self, device: str) -> bool:
         """Device may receive work this run (healthy or probing)."""
-        return not self.is_quarantined(device) or self.is_probing(device)
+        with self._lock:
+            return not self.is_quarantined(device) or self.is_probing(device)
 
     def quarantined(self) -> Set[str]:
-        return {d for d, e in self._entries.items() if e.quarantined_at >= 0}
+        with self._lock:
+            return {d for d, e in self._entries.items()
+                    if e.quarantined_at >= 0}
 
     def snapshot(self) -> Dict[str, Dict[str, int]]:
-        return {d: {"consecutive_failures": e.consecutive_failures,
-                    "total_failures": e.total_failures,
-                    "total_successes": e.total_successes,
-                    "quarantined": int(e.quarantined_at >= 0)}
-                for d, e in self._entries.items()}
+        with self._lock:
+            return {d: {"consecutive_failures": e.consecutive_failures,
+                        "total_failures": e.total_failures,
+                        "total_successes": e.total_successes,
+                        "quarantined": int(e.quarantined_at >= 0)}
+                    for d, e in self._entries.items()}

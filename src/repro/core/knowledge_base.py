@@ -31,6 +31,7 @@ import json
 import math
 import os
 import tempfile
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -177,6 +178,9 @@ class KnowledgeBase:
 
     def __init__(self, path: Optional[str] = None):
         self._profiles: Dict[Tuple[str, str], Profile] = {}
+        # concurrent graph nodes store/derive from multiple scheduler
+        # threads; RLock because store() may nest inside derive()/save()
+        self._lock = threading.RLock()
         self.path = path
         if path and os.path.exists(path):
             self.load(path)
@@ -195,26 +199,31 @@ class KnowledgeBase:
             raise ValueError(
                 f"refusing to store profile with best_time="
                 f"{profile.best_time!r} for {profile.key()}")
-        k = profile.key()
-        old = self._profiles.get(k)
-        if old is None or profile.best_time <= old.best_time:
-            self._profiles[k] = profile
-            if self.path:
-                self.save(self.path)
+        with self._lock:
+            k = profile.key()
+            old = self._profiles.get(k)
+            if old is None or profile.best_time <= old.best_time:
+                self._profiles[k] = profile
+                if self.path:
+                    self.save(self.path)
 
     def exact(self, sct_id: str, workload: Workload) -> Optional[Profile]:
-        return self._profiles.get((sct_id, workload.key()))
+        with self._lock:
+            return self._profiles.get((sct_id, workload.key()))
 
     def __len__(self) -> int:
-        return len(self._profiles)
+        with self._lock:
+            return len(self._profiles)
 
     def profiles(self) -> List[Profile]:
-        return list(self._profiles.values())
+        with self._lock:
+            return list(self._profiles.values())
 
     # -- persistence (atomic) -------------------------------------------------
     def save(self, path: str) -> None:
-        payload = json.dumps([p.to_json() for p in self._profiles.values()],
-                             indent=1)
+        with self._lock:
+            payload = json.dumps(
+                [p.to_json() for p in self._profiles.values()], indent=1)
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".kb.tmp")
@@ -228,7 +237,9 @@ class KnowledgeBase:
 
     def load(self, path: str) -> None:
         with open(path) as f:
-            for d in json.load(f):
+            records = json.load(f)
+        with self._lock:
+            for d in records:
                 p = Profile.from_json(d)
                 self._profiles[p.key()] = p
 
@@ -243,12 +254,14 @@ class KnowledgeBase:
         hit = self.exact(sct_id, workload)
         if hit is not None:
             return hit
+        with self._lock:
+            pool = list(self._profiles.values())
         scopes = (
-            [p for p in self._profiles.values() if p.sct_id == sct_id
+            [p for p in pool if p.sct_id == sct_id
              and p.workload.ndim == workload.ndim],
-            [p for p in self._profiles.values()
+            [p for p in pool
              if p.workload.key() == workload.key()],
-            [p for p in self._profiles.values()
+            [p for p in pool
              if p.workload.ndim == workload.ndim],
         )
         for cand in scopes:

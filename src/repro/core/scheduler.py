@@ -35,16 +35,22 @@ fault history attached.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures as cf
 import dataclasses
 import math
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.autotuner import TunerParams, build_profile
 from repro.core.decomposition import (ConcretePartitioning, DecompositionPlan,
                                       ExecutionSlot, build_plan)
 from repro.core.distribution import Distribution
 from repro.core.faults import DeviceHealth, ExecutionError
+from repro.core.graph import GraphDriver, GraphHandle, JobGraph
 from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
                                        Profile)
 from repro.core.load_balancer import ExecutionStats, LoadBalancer, class_times
@@ -62,6 +68,15 @@ class ScheduledRun:
     stats: ExecutionStats
     profile: Profile
     action: str                  # "exact" | "derived" | "built" | "adjusted" | "reused"
+    resident_handle: Optional[Any] = None   # slot-resident outputs, if kept
+
+    def detach(self) -> "ScheduledRun":
+        """Deep-copy the outputs out of the executor's reusable merge
+        buffers, so they survive subsequent runs on the same executor
+        (the documented output-aliasing footgun).  Returns ``self``."""
+        self.outputs = {k: np.copy(v) if isinstance(v, np.ndarray) else v
+                        for k, v in self.outputs.items()}
+        return self
 
 
 class PlanCache:
@@ -169,7 +184,9 @@ class Scheduler:
                  default_share_a: float = 0.8,
                  health: Optional[DeviceHealth] = None,
                  plan_cache: bool = True,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 max_inflight: int = 4,
+                 graph_workers: int = 8):
         self.host = host
         self.accel = accel
         self.executor = executor
@@ -184,8 +201,23 @@ class Scheduler:
         self._last_key: Optional[Tuple[str, str]] = None
         self._current: Optional[Profile] = None
         self._last_slots: List[ExecutionSlot] = []
+        self._last_class_times: Tuple[float, float] = (0.0, 0.0)
         self._counts = {"runs": 0, "failed_runs": 0, "retries": 0,
-                        "resident_handoffs": 0}
+                        "resident_handoffs": 0, "graphs": 0}
+        # decision/observation state is shared by concurrent graph nodes;
+        # RLock because the autotuner evaluator re-enters _dispatch
+        self._lock = threading.RLock()
+        # graph admission: FIFO queue, at most max_inflight graphs live
+        self.max_inflight = max_inflight
+        self.graph_workers = graph_workers
+        self._graph_lock = threading.Lock()
+        self._admission: "collections.deque[GraphDriver]" = \
+            collections.deque()
+        self._running: set = set()
+        self._graph_seq = 0
+        self._graph_pool_obj: Optional[cf.ThreadPoolExecutor] = None
+        self._virtual_busy: Dict[str, float] = {}   # virtual-clock queues
+        self._closed = False
         self.telemetry = NULL_TELEMETRY
         self.attach_telemetry(telemetry or NULL_TELEMETRY)
 
@@ -206,6 +238,10 @@ class Scheduler:
     def run(self, sct: SCT, arrays: Dict[str, Any],
             workload: Optional[Workload] = None, *,
             _resident=None, _keep_resident: bool = False) -> ScheduledRun:
+        """One scheduled execution.  Thread-safe: the decision and
+        observation phases serialise on the scheduler lock; the execute
+        phase runs unlocked, so independent graph nodes overlap on the
+        executor's per-device work queues."""
         shapes = _resident.shapes() if _resident is not None else None
         workload = workload or infer_workload(sct, arrays, shapes=shapes)
         key = (sct.unique_id(), workload.key())
@@ -213,60 +249,72 @@ class Scheduler:
         tel = self.telemetry
         with tel.tracer.span("run", sct=sct.unique_id(),
                              workload=str(workload.key())) as run_span:
-            if key != self._last_key or self._current is None:
-                profile, action = self._derive(sct, workload)       # Fig. 4 left
-            else:
-                profile, action = self._recurrent(sct, workload)    # Fig. 4 right
-            self._last_key, self._current = key, profile
-            run_span.note(action=action)
-            tel.metrics.counter("scheduler_actions_total",
-                                action=action).inc()
+            with self._lock:        # decision phase (Fig. 4)
+                if key != self._last_key or self._current is None:
+                    profile, action = self._derive(sct, workload)
+                else:
+                    profile, action = self._recurrent(sct, workload)
+                self._last_key, self._current = key, profile
+                run_span.note(action=action)
+                tel.metrics.counter("scheduler_actions_total",
+                                    action=action).inc()
 
-            # explicit plan-cache invalidation: distribution adjusted, profile
-            # rebuilt, or the device-health state (quarantine / probation /
-            # reinstatement) moved since the cache entries were created
-            if action in ("adjusted", "built"):
-                self.plan_cache.invalidate("share adjustment")
-            if self.health.version != self._health_seen:
-                self.plan_cache.invalidate("device-health change")
-                self._health_seen = self.health.version
+                # explicit plan-cache invalidation: distribution adjusted,
+                # profile rebuilt, or the device-health state (quarantine /
+                # probation / reinstatement) moved since the entries were
+                # created
+                if action in ("adjusted", "built"):
+                    self.plan_cache.invalidate("share adjustment")
+                if self.health.version != self._health_seen:
+                    self.plan_cache.invalidate("device-health change")
+                    self._health_seen = self.health.version
 
-            self.health.tick()
+                self.health.tick()
             try:
-                outputs, stats = self._dispatch(sct, arrays, profile,
-                                                resident=_resident,
-                                                keep_resident=_keep_resident)
+                outputs, stats, slots, resident_handle = self._dispatch(
+                    sct, arrays, profile,
+                    resident=_resident, keep_resident=_keep_resident)
             except ExecutionError as e:
                 # terminal failure: still feed the health tracker, so repeat
                 # offenders get quarantined even when no run ever completes
-                for base in {r.device_base for r in e.records}:
-                    self.health.record_failure(base)
-                self._counts["runs"] += 1
-                self._counts["failed_runs"] += 1
+                # — and never touch the balancer / KB / _last_slots, so a
+                # failed run cannot pollute learned state
+                with self._lock:
+                    for base in {r.device_base for r in e.records}:
+                        self.health.record_failure(base)
+                    self._counts["runs"] += 1
+                    self._counts["failed_runs"] += 1
                 tel.metrics.counter("runs_total", status="error").inc()
                 tel.events.emit("run.error", level="error",
                                 message=str(e), sct=sct.unique_id(),
                                 attempts=e.attempts)
                 raise
-            self._observe_health(stats)
-            self._record_run_metrics(sct, stats)
+            with self._lock:        # observation phase (Monitor)
+                self._last_slots = list(slots)
+                self._observe_health(stats)
+                self._record_run_metrics(sct, stats, slots)
 
-            # Monitor: update detector; persist best-known configurations.
-            # Failed runs are excluded — their times mix real compute with
-            # retry noise and would corrupt the lbt detector and KB profiles.
-            if stats.ok:
-                trigger = self.balancer.observe(stats)
-                if not trigger:
-                    self.balancer.balanced_again()
-                if stats.total < profile.best_time:
-                    improved = dataclasses.replace(profile,
-                                                   best_time=stats.total)
-                    self.kb.store(improved)
-                    self._current = improved
+                # update detector; persist best-known configurations.
+                # Failed runs are excluded — their times mix real compute
+                # with retry noise and would corrupt the lbt detector and
+                # KB profiles.
+                if stats.ok:
+                    trigger = self.balancer.observe(stats)
+                    if not trigger:
+                        self.balancer.balanced_again()
+                    self._last_class_times = (stats.time_a, stats.time_b)
+                    if stats.total < profile.best_time:
+                        profile = dataclasses.replace(profile,
+                                                      best_time=stats.total)
+                        self.kb.store(profile)
+                        if self._last_key == key:
+                            self._current = profile
             return ScheduledRun(outputs=outputs, stats=stats,
-                                profile=self._current, action=action)
+                                profile=profile, action=action,
+                                resident_handle=resident_handle)
 
-    def _record_run_metrics(self, sct: SCT, stats: ExecutionStats) -> None:
+    def _record_run_metrics(self, sct: SCT, stats: ExecutionStats,
+                            slots: Sequence[ExecutionSlot]) -> None:
         """Fold one completed run into counters / metrics / events."""
         tel = self.telemetry
         self._counts["runs"] += 1
@@ -292,7 +340,7 @@ class Scheduler:
                               cls="b").observe(stats.time_b)
         tel.metrics.histogram("overhead_seconds").observe(
             stats.overhead_seconds)
-        for slot, t in zip(self._last_slots, stats.times):
+        for slot, t in zip(slots, stats.times):
             tel.metrics.counter("device_busy_seconds_total",
                                 device=slot.device.split("/")[0]).inc(t)
 
@@ -305,8 +353,9 @@ class Scheduler:
         out: Dict[str, float] = {
             f"plan_cache.{k}": v
             for k, v in self.plan_cache.counters().items()}
-        for k, v in self._counts.items():
-            out[f"scheduler.{k}"] = v
+        with self._lock:
+            for k, v in self._counts.items():
+                out[f"scheduler.{k}"] = v
         ex = self.executor
         out["executor.pools_created"] = getattr(ex, "pools_created", 0)
         out["executor.pool_reuses"] = getattr(ex, "pool_reuses", 0)
@@ -337,12 +386,106 @@ class Scheduler:
             keep = supports and i < len(scts) - 1
             r = self.run(sct, env, _resident=resident,
                          _keep_resident=keep)
-            resident = getattr(self.executor, "last_resident", None) \
-                if keep else None
+            resident = r.resident_handle if keep else None
             if r.outputs:               # merged (final or fallback) results
                 env.update(r.outputs)
             runs.append(r)
         return runs
+
+    # -- graph pipeline -------------------------------------------------------
+    def submit(self, graph: JobGraph, arrays: Dict[str, Any], *,
+               deadline: Optional[float] = None, retries: int = 0,
+               retry_backoff: float = 0.05) -> GraphHandle:
+        """Admit one JobGraph for execution; returns its handle.
+
+        On the threaded executor the graph enters a FIFO admission queue
+        (at most ``max_inflight`` graphs execute at once) and its
+        dependency-free nodes start on the node pool immediately after
+        admission; nodes on disjoint device slots genuinely overlap.  On
+        a virtual-clock executor (``SimulatedExecutor``) the graph runs
+        inline, deterministically, on the simulated timeline — the
+        handle is already settled when this returns.
+
+        ``deadline`` / ``retries`` / ``retry_backoff`` apply per node,
+        with the whole-graph ``deadline`` budget shared across nodes."""
+        graph.validate()
+        tel = self.telemetry
+        with self._graph_lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._graph_seq += 1
+            rid = f"g{self._graph_seq}"
+        handle = GraphHandle(graph, rid)
+        driver = GraphDriver(self, handle, arrays, deadline=deadline,
+                             retries=retries, retry_backoff=retry_backoff)
+        with self._lock:
+            self._counts["graphs"] += 1
+        tel.metrics.counter("graph_nodes_total").inc(len(graph))
+        tel.events.emit("graph.submitted", request=rid, nodes=len(graph))
+        if getattr(self.executor, "virtual_clock", False):
+            driver.run_virtual()
+            return handle
+        with self._graph_lock:
+            self._admission.append(driver)
+            started = self._pump_locked()
+        for d in started:
+            d.start()
+        return handle
+
+    def _pump_locked(self) -> List[GraphDriver]:
+        """Admit queued graphs up to ``max_inflight``; caller holds
+        ``_graph_lock`` and must ``start()`` the returned drivers."""
+        started: List[GraphDriver] = []
+        while self._admission and len(self._running) < self.max_inflight:
+            d = self._admission.popleft()
+            self._running.add(d)
+            started.append(d)
+        return started
+
+    def _graph_done(self, driver: GraphDriver) -> None:
+        """Completion callback from a GraphDriver: admit the next graph."""
+        with self._graph_lock:
+            self._running.discard(driver)
+            started = self._pump_locked()
+        for d in started:
+            d.start()
+
+    def _graph_pool(self) -> cf.ThreadPoolExecutor:
+        """Lazily created node pool shared by every admitted graph."""
+        with self._graph_lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self._graph_pool_obj is None:
+                self._graph_pool_obj = cf.ThreadPoolExecutor(
+                    max_workers=self.graph_workers,
+                    thread_name_prefix="graph-node")
+            return self._graph_pool_obj
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted graph settles (or ``timeout``
+        seconds elapse); returns True when fully drained."""
+        t0 = time.monotonic()
+        while True:
+            with self._graph_lock:
+                live = list(self._running) + list(self._admission)
+            if not live:
+                return True
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                return False
+            live[0].handle.wait(0.05)
+
+    def close(self) -> None:
+        """Drain in-flight graphs, stop admission, release the node pool
+        and the executor's resources.  Idempotent."""
+        self.drain()
+        with self._graph_lock:
+            self._closed = True
+            pool, self._graph_pool_obj = self._graph_pool_obj, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        close = getattr(self.executor, "close", None)
+        if close is not None:
+            close()
 
     def _observe_health(self, stats) -> None:
         """Feed per-device success/failure of one run into the tracker."""
@@ -384,8 +527,10 @@ class Scheduler:
             self.balancer.reset_search()
             self.balancer.lbt = 0.0
             return result.profile, "built"
-        # Adjust workload distribution (adaptive binary search)
-        last = self.executor.last_class_times()
+        # Adjust workload distribution (adaptive binary search) from the
+        # last observed per-class makespans (scheduler-owned state: the
+        # executor's last_* fields are not stable under concurrent nodes)
+        last = self._last_class_times
         cur = Distribution(a=self._current.share_a, b=1 - self._current.share_a)
         new = self.balancer.adjust(cur, last[0], last[1])
         adjusted = dataclasses.replace(self._current, share_a=new.a,
@@ -395,47 +540,63 @@ class Scheduler:
     # ------------------------------------------------------------------
     def _dispatch(self, sct: SCT, arrays: Dict[str, Any], profile: Profile,
                   *, resident=None, keep_resident: bool = False
-                  ) -> Tuple[Dict[str, Any], ExecutionStats]:
+                  ) -> Tuple[Dict[str, Any], ExecutionStats,
+                             List[ExecutionSlot], Any]:
+        """Plan + execute one run; returns (outputs, stats, slots,
+        resident handle).  The plan phase (slot generation, plan cache)
+        serialises on the scheduler lock; execution does not."""
         t0 = time.perf_counter()
-        with self.telemetry.tracer.span("plan") as plan_span:
-            shapes = {k: tuple(getattr(v, "shape", ()))
-                      for k, v in arrays.items()}
-            if resident is not None:
-                # slot-resident vectors are inputs too: plan over their
-                # global (merged) shapes without materialising them
-                shapes = {**resident.shapes(), **shapes}
-            slots = self._slots(profile)
-            shares = self._per_slot_shares(profile, slots)
-            part, cache_hit = self.plan_cache.partition(sct, shapes, slots,
-                                                        shares)
-            plan_span.note(cache_hit=cache_hit, slots=len(slots))
+        with self._lock:
+            with self.telemetry.tracer.span("plan") as plan_span:
+                shapes = {k: tuple(getattr(v, "shape", ()))
+                          for k, v in arrays.items()}
+                if resident is not None:
+                    # slot-resident vectors are inputs too: plan over their
+                    # global (merged) shapes without materialising them
+                    shapes = {**resident.shapes(), **shapes}
+                slots = self._slots(profile)
+                shares = self._per_slot_shares(profile, slots)
+                part, cache_hit = self.plan_cache.partition(sct, shapes,
+                                                            slots, shares)
+                plan_span.note(cache_hit=cache_hit, slots=len(slots))
         plan_seconds = time.perf_counter() - t0
 
+        kwargs: Dict[str, Any] = {}
         if getattr(self.executor, "supports_residency", False):
-            outputs, times = self.executor.execute(
-                sct, part, arrays, profile,
-                resident=resident, keep_resident=keep_resident)
+            kwargs = {"resident": resident, "keep_resident": keep_resident}
+        execute_result = getattr(self.executor, "execute_result", None)
+        if execute_result is not None:
+            # per-call result object: safe under concurrent graph nodes
+            res = execute_result(sct, part, arrays, profile, **kwargs)
+            outputs, times = res.outputs, res.times
+            failures, retries = res.failures, res.retries
+            timing = dict(res.timing or {})
+            merge_bytes = res.merge_bytes
+            resident_out = res.resident
         else:
+            # legacy duck-typed executor: observe through last_* fields
             outputs, times = self.executor.execute(sct, part, arrays,
-                                                   profile)
+                                                   profile, **kwargs)
+            failures = list(getattr(self.executor, "last_failures", []))
+            retries = int(getattr(self.executor, "last_retries", 0))
+            timing = dict(getattr(self.executor, "last_timing", {}) or {})
+            merge_bytes = int(getattr(self.executor, "last_merge_bytes", 0))
+            resident_out = getattr(self.executor, "last_resident", None)
         n_a = sum(1 for s in slots if s.device_type != "cpu")
         ta, tb = class_times(times, n_a)
-        timing = dict(getattr(self.executor, "last_timing", {}) or {})
         stats = ExecutionStats(
             times=list(times), share_a=profile.share_a, time_a=ta, time_b=tb,
-            failures=list(getattr(self.executor, "last_failures", [])),
-            retries=int(getattr(self.executor, "last_retries", 0)),
+            failures=failures,
+            retries=retries,
             plan_seconds=plan_seconds,
             pool_seconds=float(timing.get("pool", 0.0)),
             dispatch_seconds=float(timing.get("dispatch", 0.0)),
             compute_seconds=float(timing.get("compute", 0.0)),
             merge_seconds=float(timing.get("merge", 0.0)),
-            merge_bytes=int(getattr(self.executor, "last_merge_bytes", 0)),
+            merge_bytes=merge_bytes,
             plan_cache_hit=cache_hit,
-            resident=getattr(self.executor, "last_resident", None)
-            is not None)
-        self._last_slots = list(slots)
-        return outputs, stats
+            resident=resident_out is not None)
+        return outputs, stats, list(slots), resident_out
 
     def _usable_accel_devices(self):
         return [d for d in self.accel.devices if self.health.usable(d.name)]
@@ -515,7 +676,7 @@ class Scheduler:
                         share_a=dist.a, config=cfg, best_time=math.inf,
                         origin=Origin.BUILT)
             arrays = self.executor.synthesise_arrays(sct, workload)
-            _, stats = self._dispatch(sct, arrays, p)
+            _, stats, _, _ = self._dispatch(sct, arrays, p)
             # per-class makespans recorded at dispatch time — one source
             # of truth shared with the balancer and the health tracker
             return stats.total, stats.time_a, stats.time_b

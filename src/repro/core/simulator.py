@@ -100,6 +100,9 @@ class SimulatedExecutor:
     # analytic model: no real buffers to keep slot-resident, so the
     # Scheduler never passes residency kwargs to this executor
     supports_residency = False
+    # graphs execute on the simulated timeline (GraphDriver.run_virtual):
+    # deterministic per-device-queue list scheduling instead of threads
+    virtual_clock = True
 
     def __init__(self, devices: Sequence[SimDevice], *, seed: int = 0,
                  noise: float = 0.02, compute_outputs: bool = False,
@@ -133,6 +136,16 @@ class SimulatedExecutor:
     def set_cpu_load(self, load: float) -> None:
         """External CPU load: 0 = idle, 1 = fully contended (x2 slowdown)."""
         self.cpu_load = max(0.0, load)
+
+    @property
+    def vclock_us(self) -> float:
+        """The virtual clock (µs).  Writable: the graph driver rewinds /
+        advances it to each node's dataflow-ready time."""
+        return self._vclock_us
+
+    @vclock_us.setter
+    def vclock_us(self, value: float) -> None:
+        self._vclock_us = float(value)
 
     # -- Scheduler interface -------------------------------------------------
     def execute(self, sct: SCT, part: ConcretePartitioning,
@@ -231,6 +244,20 @@ class SimulatedExecutor:
             env = dict(arrays)
             outputs = sct.apply(env)
         return outputs, times
+
+    def execute_result(self, sct: SCT, part: ConcretePartitioning,
+                       arrays: Dict[str, Any], profile: Profile):
+        """Per-call result (``ExecResult``) matching the threaded
+        executor's concurrent interface.  The simulator itself is
+        single-threaded (graph execution is sequential in virtual time),
+        so packaging from the ``last_*`` fields is race-free."""
+        from repro.core.executor import ExecResult
+        outputs, times = self.execute(sct, part, arrays, profile)
+        return ExecResult(
+            outputs=outputs, times=times,
+            failures=list(self.last_failures), retries=self.last_retries,
+            timing=dict(self.last_timing), merge_bytes=0, direct_bytes=0,
+            resident=None, n_a=self._last_n_a)
 
     def _observe_slot(self, slot, units: int, seconds: float, attempt: int,
                       round_us: float,

@@ -1,0 +1,606 @@
+"""JobGraph IR + concurrent submission pipeline (ISSUE 9).
+
+Covers the IR itself (append-only acyclic construction, chain
+degeneracy, structure queries), graph execution on the threaded
+executor (fan-out / diamond bit-identity vs. sequential runs, per-node
+fault containment and retry, residency along chain edges), the
+virtual-time path on the SimulatedExecutor (deterministic overlap of
+independent nodes, serialisation of chains), Session.submit/gather
+with backpressure, and the satellite fixes (deadline-capped retry
+backoff, ScheduledRun.detach, shutdown-path idempotency).
+"""
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AcceleratorPlatform, DeviceInfo, ExecutionError,
+                        FaultInjector, FaultPolicy, GraphError, GraphHandle,
+                        HostPlatform, JobGraph, KnowledgeBase, LoadBalancer,
+                        PlatformConfig, Profile, Scheduler, Session,
+                        ThreadedExecutor, Workload, kernel, scalar, vector)
+from repro.core.simulator import CostModel, SimDevice, SimulatedExecutor
+
+POLICY = FaultPolicy(watchdog_multiple=1e6)   # no spurious watchdog on CI
+
+
+def saxpy_tree():
+    return kernel(lambda a, x, y: a * x + y, name="saxpy",
+                  inputs=[scalar("a"), vector("x"), vector("y")],
+                  outputs=[vector("z")])
+
+
+def mul_tree():
+    return kernel(lambda x, y: x * y, name="mul",
+                  inputs=[vector("x"), vector("y")], outputs=[vector("w")])
+
+
+def sub_tree():
+    return kernel(lambda x, y: x - y, name="sub",
+                  inputs=[vector("x"), vector("y")], outputs=[vector("v")])
+
+
+def chain_trees():
+    k2 = kernel(lambda a, z: z * a, name="scale",
+                inputs=[scalar("a"), vector("z")], outputs=[vector("w")])
+    k3 = kernel(lambda w, y: w + y, name="addy",
+                inputs=[vector("w"), vector("y")], outputs=[vector("v")])
+    return [saxpy_tree(), k2, k3]
+
+
+def bad_tree():
+    def boom(x, y):
+        raise RuntimeError("deliberate kernel failure")
+    return kernel(boom, name="boom",
+                  inputs=[vector("x"), vector("y")], outputs=[vector("b")])
+
+
+def saxpy_arrays(n=256, a=2.0):
+    return {"a": np.float32(a),
+            "x": np.arange(n, dtype=np.float32),
+            "y": np.ones(n, dtype=np.float32)}
+
+
+def make_scheduler(executor, **kw):
+    host = HostPlatform(DeviceInfo("cpu0", "cpu", compute_units=4),
+                        topology={"L2": 2, "NO_FISSION": 1})
+    accel = AcceleratorPlatform([DeviceInfo("gpu0", "gpu")], max_overlap=2)
+    kw.setdefault("balancer", LoadBalancer(max_dev=0.0))
+    kw.setdefault("kb", KnowledgeBase())
+    return Scheduler(host=host, accel=accel, executor=executor, **kw)
+
+
+def sim_devices():
+    return [SimDevice("gpu0", "gpu", flops=1e12),
+            SimDevice("cpu0", "cpu", flops=1e11, cores=4)]
+
+
+def make_sim(**kw):
+    """Virtual executor whose compute dwarfs the per-slot dispatch
+    overhead, so node spans reflect the pinned workload shares."""
+    kw.setdefault("cost", CostModel(flops_per_unit=1e6, bytes_per_unit=0.0))
+    kw.setdefault("compute_outputs", True)   # chains need real dataflow
+    return SimulatedExecutor(sim_devices(), noise=0.0, **kw)
+
+
+def pin_share(sched, sct, n, share):
+    """Pre-store a KB profile so derivation pins the workload share."""
+    sched.kb.store(Profile(sct_id=sct.unique_id(), workload=Workload((n,)),
+                           share_a=share, config=PlatformConfig(),
+                           best_time=math.inf))
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+class TestJobGraphIR:
+    def test_append_only_construction(self):
+        g = JobGraph()
+        a = g.add(saxpy_tree(), name="a")
+        b = g.add(mul_tree(), name="b", after=a)
+        assert g.deps(b) == ("a",)
+        assert g.successors(a) == ["b"]
+        assert g.roots() == ["a"] and g.sinks() == ["b"]
+        assert g.topo_order() == ["a", "b"]
+        assert len(g) == 2 and "a" in g and list(g) == ["a", "b"]
+
+    def test_auto_names_are_unique(self):
+        g = JobGraph()
+        n1 = g.add(saxpy_tree())
+        n2 = g.add(saxpy_tree())
+        assert n1 != n2 and n1 in g and n2 in g
+
+    def test_duplicate_name_rejected(self):
+        g = JobGraph()
+        g.add(saxpy_tree(), name="a")
+        with pytest.raises(GraphError, match="duplicate"):
+            g.add(saxpy_tree(), name="a")
+
+    def test_unknown_dependency_rejected(self):
+        g = JobGraph()
+        with pytest.raises(GraphError, match="unknown dependency"):
+            g.add(saxpy_tree(), name="a", after="ghost")
+
+    def test_forward_dependency_unrepresentable(self):
+        # cycles cannot be expressed: after may only name earlier nodes
+        g = JobGraph()
+        g.add(saxpy_tree(), name="a")
+        with pytest.raises(GraphError):
+            g.add(mul_tree(), name="b", after=("a", "c"))
+
+    def test_empty_graph_invalid(self):
+        with pytest.raises(GraphError, match="empty"):
+            JobGraph().validate()
+
+    def test_from_chain_is_degenerate_case(self):
+        g = JobGraph.from_chain(chain_trees())
+        names = g.topo_order()
+        assert len(names) == 3
+        assert g.roots() == [names[0]] and g.sinks() == [names[2]]
+        assert g.is_chain_edge(names[0], names[1])
+        assert g.is_chain_edge(names[1], names[2])
+
+    def test_fan_out_edges_are_not_chain_edges(self):
+        g = JobGraph()
+        a = g.add(saxpy_tree(), name="a")
+        g.add(mul_tree(), name="b", after=a)
+        g.add(sub_tree(), name="c", after=a)
+        assert not g.is_chain_edge("a", "b")
+        assert not g.is_chain_edge("a", "c")
+        assert g.out_degree("a") == 2 and g.in_degree("b") == 1
+
+    def test_ancestors_diamond(self):
+        g = JobGraph()
+        g.add(saxpy_tree(), name="a")
+        g.add(mul_tree(), name="b", after="a")
+        g.add(sub_tree(), name="c", after="a")
+        g.add(mul_tree(), name="d", after=("b", "c"))
+        assert g.ancestors("d") == ["a", "b", "c"]
+        assert g.ancestors("a") == []
+
+
+# ---------------------------------------------------------------------------
+# Threaded graph execution
+# ---------------------------------------------------------------------------
+
+class TestThreadedGraphs:
+    def test_single_node_graph_equals_run(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph()
+        g.add(saxpy_tree(), name="only")
+        handle = sched.submit(g, saxpy_arrays())
+        res = handle.result(timeout=60)
+        x = saxpy_arrays()["x"]
+        np.testing.assert_array_equal(res.outputs["z"], 2.0 * x + 1.0)
+        assert res.order == ["only"]
+        assert handle.status() == {"only": "done"}
+        sched.close()
+
+    def test_fan_out_bit_identical_to_sequential(self):
+        arrays = saxpy_arrays()
+        scts = [saxpy_tree(), mul_tree(), sub_tree()]
+
+        seq = make_scheduler(ThreadedExecutor(policy=POLICY))
+        expected = {}
+        for sct in scts:
+            expected.update(seq.run(sct, dict(arrays)).outputs)
+        seq.close()
+
+        par = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph()
+        for sct in scts:
+            g.add(sct)
+        res = par.submit(g, arrays).result(timeout=60)
+        assert set(res.outputs) == {"z", "w", "v"}
+        for name in expected:
+            np.testing.assert_array_equal(res.outputs[name], expected[name])
+        par.close()
+
+    def test_diamond_fan_in_bit_identical(self):
+        arrays = saxpy_arrays()
+        a_sct = saxpy_tree()
+        b_sct = kernel(lambda z, x: z * x, name="zb",
+                       inputs=[vector("z"), vector("x")],
+                       outputs=[vector("w")])
+        c_sct = kernel(lambda z, y: z + y, name="zc",
+                       inputs=[vector("z"), vector("y")],
+                       outputs=[vector("v")])
+        d_sct = kernel(lambda w, v: w - v, name="zd",
+                       inputs=[vector("w"), vector("v")],
+                       outputs=[vector("u")])
+
+        seq = make_scheduler(ThreadedExecutor(policy=POLICY))
+        env = dict(arrays)
+        for sct in (a_sct, b_sct, c_sct, d_sct):
+            env.update(seq.run(sct, dict(env)).outputs)
+        seq.close()
+
+        par = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph()
+        g.add(a_sct, name="a")
+        g.add(b_sct, name="b", after="a")
+        g.add(c_sct, name="c", after="a")
+        g.add(d_sct, name="d", after=("b", "c"))
+        res = par.submit(g, arrays).result(timeout=60)
+        np.testing.assert_array_equal(res.outputs["u"], env["u"])
+        assert res.runs["b"] is not None and res.runs["c"] is not None
+        par.close()
+
+    def test_parallel_branches_never_see_each_other(self):
+        # b and c both produce "w"; d depends only on b, so it must see
+        # b's w even when c finishes later (ancestor layering, not
+        # completion order)
+        arrays = saxpy_arrays()
+        b_sct = kernel(lambda x: x * 2.0, name="wb",
+                       inputs=[vector("x")], outputs=[vector("w")])
+        c_sct = kernel(lambda x: x * 3.0, name="wc",
+                       inputs=[vector("x")], outputs=[vector("w")])
+        d_sct = kernel(lambda w: w + 1.0, name="wd",
+                       inputs=[vector("w")], outputs=[vector("u")])
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph()
+        g.add(b_sct, name="b")
+        g.add(c_sct, name="c")
+        g.add(d_sct, name="d", after="b")
+        res = sched.submit(g, arrays).result(timeout=60)
+        np.testing.assert_array_equal(
+            res.runs["d"].outputs["u"], arrays["x"] * 2.0 + 1.0)
+        sched.close()
+
+    def test_node_failure_contained_siblings_complete(self):
+        arrays = saxpy_arrays()
+        sched = make_scheduler(ThreadedExecutor(
+            policy=FaultPolicy(max_attempts=1, watchdog_multiple=1e6)))
+        g = JobGraph()
+        g.add(bad_tree(), name="bad")
+        g.add(saxpy_tree(), name="good")
+        g.add(mul_tree(), name="child", after="bad")
+        handle = sched.submit(g, arrays)
+        with pytest.raises(ExecutionError, match="graph node 'bad'"):
+            handle.result(timeout=60)
+        status = handle.status()
+        assert status["bad"] == "failed"
+        assert status["child"] == "skipped"
+        assert status["good"] == "done"
+        # the independent branch's run stays accessible
+        np.testing.assert_array_equal(
+            handle.runs["good"].outputs["z"], 2.0 * arrays["x"] + 1.0)
+        assert handle.error is not None and handle.error.records
+        sched.close()
+
+    def test_failed_node_error_carries_device_identity(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(ThreadedExecutor(injector=inj, policy=POLICY))
+        g = JobGraph()
+        g.add(sct, name="n")
+        handle = sched.submit(g, saxpy_arrays())
+        with pytest.raises(ExecutionError) as ei:
+            handle.result(timeout=60)
+        assert "gpu0" in str(ei.value) or "cpu0" in str(ei.value)
+        assert ei.value.records
+        sched.close()
+
+    def test_per_node_retry_recovers(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(ThreadedExecutor(
+            injector=inj,
+            policy=FaultPolicy(max_attempts=1, watchdog_multiple=1e6)))
+        g = JobGraph()
+        g.add(sct, name="n")
+        handle = sched.submit(g, saxpy_arrays(), retries=2,
+                              retry_backoff=0.01)
+        res = handle.result(timeout=60)
+        x = saxpy_arrays()["x"]
+        np.testing.assert_array_equal(res.outputs["z"], 2.0 * x + 1.0)
+        sched.close()
+
+    def test_residency_flows_along_graph_chain_edges(self):
+        arrays = saxpy_arrays()
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph.from_chain(chain_trees())
+        res = sched.submit(g, arrays).result(timeout=60)
+        np.testing.assert_allclose(
+            res.outputs["v"], (2.0 * arrays["x"] + 1.0) * 2.0 + 1.0,
+            rtol=1e-6)
+        assert sched.counters()["scheduler.resident_handoffs"] >= 1
+        sched.close()
+
+    def test_residency_false_forces_merge(self):
+        arrays = saxpy_arrays()
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        g = JobGraph()
+        a = g.add(chain_trees()[0], name="a", residency=False)
+        g.add(chain_trees()[1], name="b", after=a)
+        res = sched.submit(g, arrays).result(timeout=60)
+        assert sched.counters()["scheduler.resident_handoffs"] == 0
+        # merged intermediate is visible on the sink path
+        np.testing.assert_allclose(
+            res.runs["b"].outputs["w"], (2.0 * arrays["x"] + 1.0) * 2.0,
+            rtol=1e-6)
+        sched.close()
+
+    def test_graph_counters_and_events(self):
+        from repro.core import Telemetry
+        tel = Telemetry()
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sched.attach_telemetry(tel)
+        g = JobGraph()
+        g.add(saxpy_tree())
+        sched.submit(g, saxpy_arrays()).result(timeout=60)
+        assert sched.counters()["scheduler.graphs"] == 1
+        kinds = {e.kind for e in tel.events.records()}
+        assert {"graph.submitted", "graph.admitted",
+                "graph.done"} <= kinds
+        sched.close()
+
+
+# ---------------------------------------------------------------------------
+# Virtual-time graph execution (SimulatedExecutor)
+# ---------------------------------------------------------------------------
+
+class TestVirtualGraphs:
+    def test_fan_out_overlaps_in_virtual_time(self):
+        n = 4096
+        scts = [saxpy_tree(), mul_tree(), sub_tree()]
+        sched = make_scheduler(make_sim())
+        # cpu-heavy share: each node's short gpu leg clears the gpu queue
+        # quickly while its long cpu leg is still running, so all three
+        # nodes end up simultaneously in flight
+        for sct in scts:
+            pin_share(sched, sct, n, 0.1)
+        g = JobGraph()
+        names = [g.add(sct) for sct in scts]
+        handle = sched.submit(g, saxpy_arrays(n))
+        assert handle.done()            # virtual graphs settle inline
+        spans = handle.spans()
+        assert len(spans) == 3
+        # all three nodes run at the instant the last one starts
+        last_start = max(s for s, _ in spans.values())
+        first_end = min(e for _, e in spans.values())
+        assert last_start < first_end, spans
+        assert all(handle.status()[nm] == "done" for nm in names)
+
+    def test_chain_serialises_in_virtual_time(self):
+        n = 4096
+        sched = make_scheduler(make_sim())
+        for sct in chain_trees():
+            pin_share(sched, sct, n, 0.5)
+        g = JobGraph.from_chain(chain_trees())
+        handle = sched.submit(g, saxpy_arrays(n))
+        spans = [handle.spans()[nm] for nm in g.topo_order()]
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-6      # dataflow: no overlap along a chain
+            assert e1 > e0
+
+    def test_virtual_queue_contention_is_shared_across_requests(self):
+        n = 4096
+        sched = make_scheduler(make_sim())
+        pin_share(sched, saxpy_tree(), n, 0.5)
+        g1 = JobGraph()
+        g1.add(saxpy_tree(), name="n1")
+        g2 = JobGraph()
+        g2.add(saxpy_tree(), name="n2")
+        h1 = sched.submit(g1, saxpy_arrays(n))
+        h2 = sched.submit(g2, saxpy_arrays(n))
+        (s1, e1) = h1.spans()["n1"]
+        (s2, e2) = h2.spans()["n2"]
+        # second request queues behind the first on busy device queues
+        assert e2 > e1 and s2 >= s1
+
+    def test_virtual_failure_skips_descendants(self):
+        n = 4096
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(make_sim(
+            injector=inj, policy=FaultPolicy(max_attempts=2)))
+        g = JobGraph()
+        g.add(saxpy_tree(), name="a")
+        g.add(mul_tree(), name="b", after="a")
+        handle = sched.submit(g, saxpy_arrays(n))
+        with pytest.raises(ExecutionError, match="graph node 'a'"):
+            handle.result(timeout=1)
+        assert handle.status() == {"a": "failed", "b": "skipped"}
+
+
+# ---------------------------------------------------------------------------
+# Session.submit / gather / backpressure
+# ---------------------------------------------------------------------------
+
+class TestSessionGraphs:
+    def test_submit_and_gather(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        arrays = saxpy_arrays()
+        with Session(sched) as sess:
+            g1 = JobGraph()
+            g1.add(saxpy_tree(), name="s")
+            g2 = JobGraph()
+            g2.add(mul_tree(), name="m")
+            h1 = sess.submit(g1, **arrays)
+            h2 = sess.submit(g2, **arrays)
+            r1, r2 = sess.gather(h1, h2, timeout=60)
+        np.testing.assert_array_equal(r1.outputs["z"],
+                                      2.0 * arrays["x"] + 1.0)
+        np.testing.assert_array_equal(r2.outputs["w"],
+                                      arrays["x"] * arrays["y"])
+
+    def test_run_and_run_chain_are_graph_wrappers(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        arrays = saxpy_arrays()
+        with Session(sched) as sess:
+            out = sess.run(saxpy_tree(), **arrays).get(timeout=60)
+            runs = sess.run_chain(chain_trees(), **arrays).get(timeout=60)
+        np.testing.assert_array_equal(out.outputs["z"],
+                                      2.0 * arrays["x"] + 1.0)
+        assert len(runs) == 3
+        np.testing.assert_allclose(
+            runs[-1].outputs["v"], (2.0 * arrays["x"] + 1.0) * 2.0 + 1.0,
+            rtol=1e-6)
+
+    def test_max_inflight_validation(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        with pytest.raises(ValueError):
+            Session(sched, max_inflight=0)
+        sched.close()
+
+    def test_backpressure_blocks_beyond_max_inflight(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        gate = threading.Event()
+
+        def slow_fn(x):
+            gate.wait(10)
+            return x
+        slow = kernel(slow_fn, name="slow", inputs=[vector("x")],
+                      outputs=[vector("o")])
+        sess = Session(sched, max_inflight=1)
+        g1 = JobGraph()
+        g1.add(slow, name="s")
+        h1 = sess.submit(g1, x=np.ones(8, dtype=np.float32))
+
+        second = {}
+
+        def try_second():
+            g2 = JobGraph()
+            g2.add(saxpy_tree(), name="n")
+            second["handle"] = sess.submit(g2, **saxpy_arrays())
+
+        t = threading.Thread(target=try_second)
+        t.start()
+        t.join(0.3)
+        assert t.is_alive()             # blocked: slot still held by g1
+        gate.set()
+        t.join(30)
+        assert not t.is_alive()
+        assert h1.result(timeout=30) is not None
+        assert second["handle"].result(timeout=30) is not None
+        sess.shutdown()
+
+    def test_many_submissions_with_tight_inflight(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        arrays = saxpy_arrays()
+        with Session(sched, max_inflight=2) as sess:
+            handles = []
+            for _ in range(6):
+                g = JobGraph()
+                g.add(saxpy_tree(), name="n")
+                handles.append(sess.submit(g, **arrays))
+            results = sess.gather(*handles, timeout=60)
+        for r in results:
+            np.testing.assert_array_equal(r.outputs["z"],
+                                          2.0 * arrays["x"] + 1.0)
+
+    def test_submit_after_shutdown_raises(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sess = Session(sched)
+        sess.shutdown()
+        g = JobGraph()
+        g.add(saxpy_tree(), name="n")
+        with pytest.raises(RuntimeError, match="shut down"):
+            sess.submit(g, **saxpy_arrays())
+
+
+# ---------------------------------------------------------------------------
+# Satellites: deadline-capped backoff, detach, shutdown paths
+# ---------------------------------------------------------------------------
+
+class TestDeadlineCappedBackoff:
+    def test_backoff_never_sleeps_past_deadline(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(ThreadedExecutor(
+            injector=inj,
+            policy=FaultPolicy(max_attempts=1, watchdog_multiple=1e6,
+                               default_deadline=None)))
+        with Session(sched) as sess:
+            t0 = time.monotonic()
+            fut = sess.run(sct, deadline=0.3, retries=8,
+                           retry_backoff=10.0, **saxpy_arrays())
+            with pytest.raises(ExecutionError,
+                               match="deadline|did not complete"):
+                fut.get()
+            elapsed = time.monotonic() - t0
+        # without the cap the first pause alone would sleep 10s
+        assert elapsed < 3.0, elapsed
+
+    def test_deadline_exhaustion_message_counts_attempts(self):
+        sct = saxpy_tree()
+        inj = FaultInjector(crash_prob=1.0)
+        sched = make_scheduler(ThreadedExecutor(
+            injector=inj,
+            policy=FaultPolicy(max_attempts=1, watchdog_multiple=1e6,
+                               default_deadline=None)))
+        g = JobGraph()
+        g.add(sct, name="n")
+        handle = sched.submit(g, saxpy_arrays(), deadline=0.2, retries=50,
+                              retry_backoff=0.05)
+        with pytest.raises(ExecutionError,
+                           match="request deadline .* exceeded"):
+            handle.result(timeout=30)
+        sched.close()
+
+
+class TestDetach:
+    def test_detach_survives_buffer_reuse(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY,
+                                                reuse_buffers=True))
+        sct = saxpy_tree()
+        r1 = sched.run(sct, saxpy_arrays(a=2.0)).detach()
+        z1 = np.copy(r1.outputs["z"])
+        sched.run(sct, saxpy_arrays(a=5.0))     # reuses the merge buffer
+        np.testing.assert_array_equal(r1.outputs["z"], z1)
+        sched.close()
+
+    def test_detach_returns_self_and_copies(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY,
+                                                reuse_buffers=True))
+        sct = saxpy_tree()
+        r = sched.run(sct, saxpy_arrays())
+        before = r.outputs["z"]
+        assert r.detach() is r
+        assert r.outputs["z"] is not before
+        np.testing.assert_array_equal(r.outputs["z"], before)
+        sched.close()
+
+
+class TestShutdownPaths:
+    def test_session_shutdown_idempotent(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sess = Session(sched)
+        sess.run(saxpy_tree(), **saxpy_arrays()).get(timeout=60)
+        sess.shutdown()
+        sess.shutdown()                 # second call is a no-op
+        with sess:                      # CM exit after explicit shutdown
+            pass
+
+    def test_executor_double_close(self):
+        ex = ThreadedExecutor(policy=POLICY)
+        sched = make_scheduler(ex)
+        sched.run(saxpy_tree(), saxpy_arrays())
+        ex.close()
+        ex.close()                      # idempotent
+        assert ex._queues == {} and ex._buffers == {}
+
+    def test_shutdown_with_inflight_requests_drains(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sess = Session(sched)
+        handles = []
+        for _ in range(4):
+            g = JobGraph()
+            g.add(saxpy_tree(), name="n")
+            handles.append(sess.submit(g, **saxpy_arrays(n=2048)))
+        sess.shutdown()                 # drains, then closes
+        for h in handles:
+            assert h.done()
+            assert h.result(timeout=1).outputs["z"].shape == (2048,)
+
+    def test_scheduler_close_idempotent_and_rejects_submissions(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        sched.close()
+        sched.close()
+        g = JobGraph()
+        g.add(saxpy_tree(), name="n")
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit(g, saxpy_arrays())
