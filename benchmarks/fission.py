@@ -59,7 +59,7 @@ def simulate_fission(name: str, size: int) -> Dict:
         prof = Profile(sct_id=sct.unique_id(), workload=workload,
                        share_a=0.0,
                        config=PlatformConfig(fission_level=level))
-        _, stats, _, _ = sched._dispatch(sct, _arrays(sct, workload), prof)
+        _, stats, _, _, _ = sched._dispatch(sct, _arrays(sct, workload), prof)
         times[level] = stats.total
     best = min(times, key=times.get)
     return {"benchmark": name, "size": size, "best_level": best,

@@ -54,7 +54,7 @@ def tune_cell(name: str, size: int, n_gpus: int) -> Dict:
     def evaluate(cfg: PlatformConfig, dist: Distribution):
         prof = Profile(sct_id=sct.unique_id(), workload=workload,
                        share_a=dist.a, config=cfg, best_time=math.inf)
-        _, stats, _, _ = sched._dispatch(sct, arrays, prof)
+        _, stats, _, _, _ = sched._dispatch(sct, arrays, prof)
         n_a = sum(1 for s in sched._slots(prof)
                   if s.device_type != "cpu")
         ta = max(stats.times[:n_a]) if n_a else 0.0
@@ -71,7 +71,7 @@ def tune_cell(name: str, size: int, n_gpus: int) -> Dict:
                         config=PlatformConfig(
                             fission_level="NO_FISSION",
                             overlap=res.profile.config.overlap))
-    _, base_stats, _, _ = sched._dispatch(sct, arrays, base_prof)
+    _, base_stats, _, _, _ = sched._dispatch(sct, arrays, base_prof)
     return {"benchmark": name, "size": size, "gpus": n_gpus,
             "hybrid_time": res.profile.best_time,
             "gpu_only_time": base_stats.total,

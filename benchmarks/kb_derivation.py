@@ -31,7 +31,7 @@ def _evaluator(sched, sct, workload, arrays):
     def evaluate(cfg: PlatformConfig, dist: Distribution):
         prof = Profile(sct_id=sct.unique_id(), workload=workload,
                        share_a=dist.a, config=cfg, best_time=math.inf)
-        _, stats, _, _ = sched._dispatch(sct, arrays, prof)
+        _, stats, _, _, _ = sched._dispatch(sct, arrays, prof)
         n_a = sum(1 for s in sched._slots(prof) if s.device_type != "cpu")
         ta, tb = class_times(stats.times, n_a)
         return stats.total, ta, tb
@@ -79,7 +79,7 @@ def main(full: bool = False) -> List[str]:
         unbalanced = ops = 0
         best_time = math.inf
         for _ in range(runs):
-            _, stats, _, _ = sched._dispatch(sct, arrays, cur)
+            _, stats, _, _, _ = sched._dispatch(sct, arrays, cur)
             best_time = min(best_time, stats.total)
             if balancer.is_unbalanced(stats.deviation):
                 unbalanced += 1

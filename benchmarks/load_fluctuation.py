@@ -38,7 +38,7 @@ def main(full: bool = False) -> List[str]:
     cur = prof
     for run in range(runs):
         sim.set_cpu_load(3.0 if load_at <= run < load_off else 0.0)
-        _, stats, _, _ = sched._dispatch(sct, arrays, cur)
+        _, stats, _, _, _ = sched._dispatch(sct, arrays, cur)
         trig = balancer.observe(stats)
         if trig:
             n_a = sum(1 for s in sched._slots(cur)

@@ -35,7 +35,7 @@ def main(full: bool = False) -> List[str]:
         def evaluate(cfg: PlatformConfig, dist: Distribution):
             pr = Profile(sct_id=sct.unique_id(), workload=workload,
                          share_a=dist.a, config=cfg)
-            _, st, _, _ = sched._dispatch(sct, arrays, pr)
+            _, st, _, _, _ = sched._dispatch(sct, arrays, pr)
             n_a = sum(1 for sl in sched._slots(pr)
                       if sl.device_type != "cpu")
             ta, tb = class_times(st.times, n_a)
@@ -47,7 +47,7 @@ def main(full: bool = False) -> List[str]:
                              ).profile
         worst = 1.0
         for _ in range(runs):
-            _, stats, _, _ = sched._dispatch(sct, arrays, prof)
+            _, stats, _, _, _ = sched._dispatch(sct, arrays, prof)
             worst = min(worst, stats.deviation)
         print(f"{name:18s} {size:>9d}  min deviation {worst:.3f} "
               f"(paper range: 0.825-0.979)")

@@ -26,7 +26,7 @@ def main(full: bool = False) -> List[str]:
     def evaluate(cfg: PlatformConfig, dist: Distribution):
         prof = Profile(sct_id=sct.unique_id(), workload=workload,
                        share_a=dist.a, config=cfg, best_time=math.inf)
-        _, stats, _, _ = sched._dispatch(sct, arrays, prof)
+        _, stats, _, _, _ = sched._dispatch(sct, arrays, prof)
         n_a = sum(1 for s in sched._slots(prof) if s.device_type != "cpu")
         ta = max(stats.times[:n_a]) if n_a else 0.0
         tb = max(stats.times[n_a:]) if len(stats.times) > n_a else 0.0

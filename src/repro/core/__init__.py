@@ -33,7 +33,8 @@ from repro.core.knowledge_base import (KnowledgeBase, Origin, PlatformConfig,
 from repro.core.load_balancer import ExecutionStats, LoadBalancer
 from repro.core.platforms import (AcceleratorPlatform, DeviceInfo,
                                   FISSION_LEVELS, HostPlatform)
-from repro.core.scheduler import (PlanCache, ScheduledRun, Scheduler,
+from repro.core.scheduler import (GraphPlan, GraphPlanCache, NodePlan,
+                                  PlanCache, ScheduledRun, Scheduler,
                                   infer_workload)
 from repro.core.simulator import CostModel, SimDevice, SimulatedExecutor
 from repro.core.skeletons import (SCT, KernelNode, Loop, LoopState, Map,

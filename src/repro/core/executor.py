@@ -1050,6 +1050,16 @@ class Session:
     ``max_inflight`` graphs may be unsettled at once; beyond that,
     ``submit`` blocks (backpressure) until one completes.
 
+    Recurrent submissions are transparent to callers but cheaper: a
+    structurally identical graph over same-shaped arrays is served from
+    the scheduler's whole-graph plan cache (every node pre-planned, no
+    decide/plan lock traffic), and — when the scheduler was built with
+    ``fusion_window > 0`` — identical single-node graphs submitted
+    within the window coalesce into one wider run whose merged output
+    is sliced back per request.  Both paths settle the returned
+    ``GraphHandle``/``Future`` exactly as the ordinary path does, with
+    bit-identical outputs.
+
     ``run`` accepts a request-level ``deadline`` (seconds, enforced
     across retries and by ``Future.get``) and ``retries`` with
     exponential backoff on terminal

@@ -182,6 +182,22 @@ class JobGraph:
         # append-only construction: insertion order is topological
         return list(self._nodes)
 
+    def signature(self) -> Tuple:
+        """Structural identity of the graph, for whole-graph plan caching.
+
+        Two graphs share a signature when they bind the same SCTs (by
+        ``unique_id``) over the same dependency structure with the same
+        residency intents — node *names* are labels and do not
+        participate.  Together with the shapes of the submit-time input
+        arrays this keys the scheduler's
+        :class:`~repro.core.scheduler.GraphPlanCache`.
+        """
+        pos = {n: i for i, n in enumerate(self._nodes)}
+        return tuple((node.sct.unique_id(),
+                      tuple(pos[d] for d in node.deps),
+                      node.residency)
+                     for node in self._nodes.values())
+
     def ancestors(self, name: str) -> List[str]:
         """Transitive dependencies of ``name``, in topological order."""
         seen = set()
@@ -338,12 +354,24 @@ class GraphDriver:
     graph budget in seconds.  Each backoff pause is capped by the
     remaining deadline and a node raises immediately when none remains
     — sleeping past the request deadline is a bug, not a retry.
+
+    Whole-graph plan caching: ``preplanned`` (a topo-ordered list of
+    :class:`~repro.core.scheduler.NodePlan`, from a
+    ``GraphPlanCache`` hit at submit time) routes every node through
+    the scheduler's pre-planned dispatch — no decide-phase lock round
+    trip.  On a miss, ``plan_key`` identifies the entry to record: when
+    every node completes cleanly (no faults/retries, no distribution
+    adjustment, no device-health movement) the driver hands its
+    per-node plans back via ``Scheduler._graph_plan_record``.
     """
 
     def __init__(self, scheduler, handle: GraphHandle,
                  arrays: Dict[str, Any], *,
                  deadline: Optional[float] = None, retries: int = 0,
-                 retry_backoff: float = 0.05):
+                 retry_backoff: float = 0.05,
+                 preplanned: Optional[List[Any]] = None,
+                 plan_key: Optional[Tuple] = None,
+                 plan_epoch: int = 0):
         self.sched = scheduler
         self.handle = handle
         self.graph = handle.graph
@@ -351,9 +379,14 @@ class GraphDriver:
         self.deadline = deadline
         self.retries = int(retries)
         self.retry_backoff = retry_backoff
+        self.preplanned = preplanned
+        self.plan_key = plan_key
+        self.plan_epoch = plan_epoch
         self._t0 = time.monotonic()
         self._epoch = time.perf_counter()
         self._lock = threading.Lock()
+        self._order = self.graph.topo_order()
+        self._pos = {n: i for i, n in enumerate(self._order)}
         self._waiting = {n: len(self.graph.deps(n))
                          for n in self.graph.names()}
         self._outputs: Dict[str, Dict[str, Any]] = {}
@@ -401,6 +434,8 @@ class GraphDriver:
         node = self.graph.node(name)
         keep = self._keep_resident(name)
         env, resident = self._node_env(name)
+        plan = (self.preplanned[self._pos[name]]
+                if self.preplanned is not None else None)
         tel = self.sched.telemetry
         last: Optional[ExecutionError] = None
         for k in range(self.retries + 1):
@@ -413,7 +448,7 @@ class GraphDriver:
                 with tel.tracer.span("node", request=self.handle.request_id,
                                      node=name, retry=k):
                     return self.sched.run(node.sct, env, _resident=resident,
-                                          _keep_resident=keep)
+                                          _keep_resident=keep, _plan=plan)
             except ExecutionError as e:
                 last = e
                 if k == self.retries:
@@ -517,6 +552,10 @@ class GraphDriver:
             if exc is not None:
                 error = _wrap_node_error(name, exc)
                 break
+        if error is None:
+            record = getattr(self.sched, "_graph_plan_record", None)
+            if record is not None:
+                record(self)
         tel = self.sched.telemetry
         tel.metrics.counter(
             "graphs_total",

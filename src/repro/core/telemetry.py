@@ -20,7 +20,13 @@ three standard observability primitives, dependency-free:
 :class:`MetricsRegistry`
     Counters, gauges and histograms with optional labels, a
     Prometheus-style text dump (:meth:`~MetricsRegistry.to_prometheus`)
-    and a JSON :meth:`~MetricsRegistry.snapshot`.
+    and a JSON :meth:`~MetricsRegistry.snapshot`.  The recurrent-graph
+    fast path reports through ``graph_plan_cache_{hits,misses,
+    invalidations}_total`` and cross-request fusion through
+    ``fused_requests_total`` / ``fused_batches_total``, alongside the
+    per-run ``scheduler_actions_total`` labels ``action="preplanned"``
+    and ``action="fused"`` (see the scheduler module docstring for the
+    semantics of both paths).
 
 :class:`EventLog`
     Bounded ring buffer of structured events with pluggable sinks and a

@@ -1,0 +1,198 @@
+"""Cross-request fusion (ISSUE 10).
+
+With ``fusion_window > 0``, identical single-node graphs submitted
+within the window coalesce into one wider partitioning — one scheduled
+run, one merge — and each request's handle is settled from a slice of
+the fused result.  Covers bit-identity against independently-run
+requests (clean and under fault injection), the ``fusion_max`` early
+flush, the window-expiry single-member fallback, static/dynamic
+ineligibility (partition-bound traits, differing scalar values, user
+merge functions, undeclared arrays), and ``drain()`` flushing open
+batches.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FaultInjector, JobGraph, ThreadedExecutor, Trait,
+                        kernel, scalar, vector)
+
+from test_graph import POLICY, make_scheduler, saxpy_arrays, saxpy_tree
+
+
+def single_node_graph():
+    g = JobGraph()
+    g.add(saxpy_tree(), name="s")
+    return g
+
+
+def member_arrays(i, n=256):
+    arrays = saxpy_arrays(n)
+    arrays["x"] = arrays["x"] + np.float32(i)
+    return arrays
+
+
+def independent_outputs(k, n=256):
+    sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+    try:
+        # np.copy before the next run: merged output buffers are leased
+        # and reused across runs (zero-copy pipeline)
+        return [np.copy(sched.submit(single_node_graph(),
+                                     member_arrays(i, n))
+                        .result(30).outputs["z"])
+                for i in range(k)]
+    finally:
+        sched.close()
+
+
+class TestFusion:
+    def test_fused_batch_bit_identical(self):
+        expected = independent_outputs(4)
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=5.0, fusion_max=4)
+        try:
+            handles = [sched.submit(single_node_graph(), member_arrays(i))
+                       for i in range(4)]
+            results = [h.result(30) for h in handles]
+            for r, exp in zip(results, expected):
+                np.testing.assert_array_equal(r.outputs["z"], exp)
+            assert all(r.runs["s"].action == "fused" for r in results)
+            c = sched.counters()
+            assert c["scheduler.fused_requests"] == 4
+            assert c["scheduler.fused_batches"] == 1
+            assert c["scheduler.runs"] == 1
+        finally:
+            sched.close()
+
+    def test_fusion_max_flushes_early(self):
+        """fusion_max members close the batch without waiting for the
+        window — with a 30 s window this would time out otherwise."""
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=30.0, fusion_max=3)
+        try:
+            handles = [sched.submit(single_node_graph(), member_arrays(i))
+                       for i in range(3)]
+            for h in handles:
+                h.result(10)
+            assert sched.counters()["scheduler.fused_batches"] == 1
+        finally:
+            sched.close()
+
+    def test_window_expiry_single_member_falls_back(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=0.05, fusion_max=8)
+        try:
+            r = sched.submit(single_node_graph(),
+                             member_arrays(0)).result(30)
+            assert r.runs["s"].action != "fused"
+            np.testing.assert_array_equal(
+                r.outputs["z"], 2.0 * np.arange(256, dtype=np.float32) + 1.0)
+            assert sched.counters()["scheduler.fused_requests"] == 0
+        finally:
+            sched.close()
+
+    def test_differing_scalar_values_do_not_fuse(self):
+        # reuse_buffers=False: both individual results stay readable
+        # after the other run completed
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY,
+                                                reuse_buffers=False),
+                               fusion_window=0.05, fusion_max=2)
+        try:
+            a2 = saxpy_arrays(256, a=2.0)
+            a3 = saxpy_arrays(256, a=3.0)
+            h2 = sched.submit(single_node_graph(), a2)
+            h3 = sched.submit(single_node_graph(), a3)
+            x = np.arange(256, dtype=np.float32)
+            np.testing.assert_array_equal(h2.result(30).outputs["z"],
+                                          2.0 * x + 1.0)
+            np.testing.assert_array_equal(h3.result(30).outputs["z"],
+                                          3.0 * x + 1.0)
+            assert sched.counters()["scheduler.fused_requests"] == 0
+        finally:
+            sched.close()
+
+    def test_partition_bound_trait_is_ineligible(self):
+        """A SIZE-trait scalar is bound to the partition geometry; a
+        fused (wider) run would feed members the wrong value."""
+        sct = kernel(lambda x, n: x + np.float32(n), name="plusn",
+                     inputs=[vector("x"), scalar("n", trait=Trait.SIZE)],
+                     outputs=[vector("z")])
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=0.05, fusion_max=2)
+        try:
+            arrays = {"x": np.arange(256, dtype=np.float32)}
+            handles = []
+            for _ in range(2):
+                g = JobGraph()
+                g.add(sct, name="s")
+                handles.append(sched.submit(g, dict(arrays)))
+            for h in handles:
+                r = h.result(30)
+                assert r.runs["s"].action != "fused"
+            assert sched.counters()["scheduler.fused_requests"] == 0
+        finally:
+            sched.close()
+
+    def test_user_merge_is_ineligible(self):
+        """Any user merge on a produced output defeats output slicing,
+        so the request must run unfused (the merge itself is the
+        default concatenation, keeping the individual path valid)."""
+        sched = make_scheduler(
+            ThreadedExecutor(policy=POLICY,
+                             merges={"z": lambda parts:
+                                     np.concatenate(parts)}),
+            fusion_window=0.05, fusion_max=2)
+        try:
+            handles = [sched.submit(single_node_graph(), member_arrays(i))
+                       for i in range(2)]
+            for h in handles:
+                assert h.result(30).runs["s"].action != "fused"
+            assert sched.counters()["scheduler.fused_requests"] == 0
+        finally:
+            sched.close()
+
+    def test_undeclared_arrays_are_ineligible(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=0.05, fusion_max=2)
+        try:
+            handles = []
+            for i in range(2):
+                arrays = member_arrays(i)
+                arrays["junk"] = np.zeros(4, dtype=np.float32)
+                handles.append(sched.submit(single_node_graph(), arrays))
+            for h in handles:
+                assert h.result(30).runs["s"].action != "fused"
+            assert sched.counters()["scheduler.fused_requests"] == 0
+        finally:
+            sched.close()
+
+    def test_fused_bit_identical_under_fault_injection(self):
+        expected = independent_outputs(4)
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY,
+                                                injector=inj),
+                               fusion_window=5.0, fusion_max=4)
+        try:
+            handles = [sched.submit(single_node_graph(), member_arrays(i))
+                       for i in range(4)]
+            results = [h.result(30) for h in handles]
+            for r, exp in zip(results, expected):
+                np.testing.assert_array_equal(r.outputs["z"], exp)
+            assert all(r.runs["s"].action == "fused" for r in results)
+            # the crash was contained inside the single fused run
+            assert any(r.runs["s"].stats.retries for r in results)
+            assert sched.counters()["scheduler.fused_requests"] == 4
+        finally:
+            sched.close()
+
+    def test_drain_flushes_open_batches(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               fusion_window=30.0, fusion_max=8)
+        try:
+            h = sched.submit(single_node_graph(), member_arrays(0))
+            assert sched.drain(20)
+            assert h.done()
+            np.testing.assert_array_equal(
+                h.result(0).outputs["z"],
+                2.0 * np.arange(256, dtype=np.float32) + 1.0)
+        finally:
+            sched.close()

@@ -1,0 +1,170 @@
+"""Whole-graph plan cache (ISSUE 10).
+
+A second submission of a structurally identical graph with identical
+array signatures is served pre-planned: every node dispatches with the
+recorded ``NodePlan``, acquiring neither the decide lock nor the plan
+lock, and producing bit-identical outputs.  Invalidation paths — a
+device-health transition, an explicit plan-cache invalidation, a
+faulted/retried node — fall back to ordinary per-node planning.  Also
+covers the satellite regression: repeated identical single-node graphs
+hit the per-node plan cache at >= 7/8.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FaultInjector, JobGraph, SimulatedExecutor,
+                        ThreadedExecutor, kernel, scalar, vector)
+
+from test_graph import (POLICY, chain_trees, make_scheduler, make_sim,
+                        saxpy_arrays, saxpy_tree)
+
+
+def lock_counts(sched):
+    c = sched.counters()
+    return (c["scheduler.decide_locks"], c["scheduler.plan_locks"])
+
+
+def single_node_graph():
+    g = JobGraph()
+    g.add(saxpy_tree(), name="s")
+    return g
+
+
+def chain_graph():
+    g = JobGraph()
+    prev = None
+    for i, sct in enumerate(chain_trees()):
+        prev = g.add(sct, name=f"n{i}",
+                     after=(prev,) if prev is not None else ())
+    return g
+
+
+class TestGraphPlanCache:
+    def test_second_submission_preplanned_zero_locks(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            arrays = saxpy_arrays(512)
+            r1 = sched.submit(single_node_graph(), arrays).result(30)
+            z1 = np.copy(r1.outputs["z"])   # merge buffers are reused
+            locks0 = lock_counts(sched)
+            r2 = sched.submit(single_node_graph(), arrays).result(30)
+            locks1 = lock_counts(sched)
+            # the pre-planned hit path acquires neither scheduler lock
+            assert locks1 == locks0
+            assert [r.action for r in r2.runs.values()] == ["preplanned"]
+            np.testing.assert_array_equal(z1, r2.outputs["z"])
+            c = sched.plan_cache.counters()
+            assert c["graph_hits"] == 1 and c["graph_misses"] == 1
+        finally:
+            sched.close()
+
+    def test_chain_graph_preplanned_bit_identical(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            arrays = saxpy_arrays(512)
+            r1 = sched.submit(chain_graph(), arrays).result(30)
+            v1 = np.copy(r1.outputs["v"])
+            locks0 = lock_counts(sched)
+            r2 = sched.submit(chain_graph(), arrays).result(30)
+            assert lock_counts(sched) == locks0
+            assert all(r.action == "preplanned" for r in r2.runs.values())
+            np.testing.assert_array_equal(v1, r2.outputs["v"])
+        finally:
+            sched.close()
+
+    def test_array_signature_in_key(self):
+        """A different input shape is a different graph-plan key."""
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            sched.submit(single_node_graph(), saxpy_arrays(256)).result(30)
+            r = sched.submit(single_node_graph(),
+                             saxpy_arrays(512)).result(30)
+            assert all(x.action != "preplanned" for x in r.runs.values())
+            assert sched.plan_cache.counters()["graph_misses"] == 2
+        finally:
+            sched.close()
+
+    def test_health_movement_drops_plan(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            arrays = saxpy_arrays(512)
+            r1 = sched.submit(single_node_graph(), arrays).result(30)
+            z1 = np.copy(r1.outputs["z"])
+            for _ in range(sched.health.quarantine_after):
+                sched.health.record_failure("gpu0")
+            assert sched.health.version > 0
+            r2 = sched.submit(single_node_graph(), arrays).result(30)
+            # stale health version: entry dropped, node planned afresh
+            assert all(x.action != "preplanned" for x in r2.runs.values())
+            np.testing.assert_array_equal(z1, r2.outputs["z"])
+        finally:
+            sched.close()
+
+    def test_explicit_invalidation_forces_replan(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            arrays = saxpy_arrays(512)
+            sched.submit(single_node_graph(), arrays).result(30)
+            sched.plan_cache.invalidate("test")
+            r = sched.submit(single_node_graph(), arrays).result(30)
+            assert all(x.action != "preplanned" for x in r.runs.values())
+            assert sched.plan_cache.counters()["graph_misses"] == 2
+        finally:
+            sched.close()
+
+    def test_faulted_graph_is_not_recorded(self):
+        inj = FaultInjector(crash_on_call={"gpu0": [1]})
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY,
+                                                injector=inj))
+        try:
+            arrays = saxpy_arrays(512)
+            r1 = sched.submit(single_node_graph(), arrays).result(30)
+            assert any(x.stats.retries for x in r1.runs.values())
+            # the in-run repartition marked the plan dirty: no recording
+            r2 = sched.submit(single_node_graph(), arrays).result(30)
+            assert all(x.action != "preplanned" for x in r2.runs.values())
+            assert sched.plan_cache.counters()["graph_misses"] == 2
+        finally:
+            sched.close()
+
+    def test_disabled_cache_never_preplans(self):
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY),
+                               plan_cache=False)
+        try:
+            arrays = saxpy_arrays(512)
+            for _ in range(2):
+                r = sched.submit(single_node_graph(), arrays).result(30)
+                assert all(x.action != "preplanned"
+                           for x in r.runs.values())
+        finally:
+            sched.close()
+
+    def test_virtual_path_preplanned_and_deterministic(self):
+        arrays = saxpy_arrays(4096)
+        sched = make_scheduler(make_sim())
+        try:
+            r1 = sched.submit(single_node_graph(), arrays).result(30)
+            z1 = np.copy(r1.outputs["z"])
+            r2 = sched.submit(single_node_graph(), arrays).result(30)
+            assert [x.action for x in r2.runs.values()] == ["preplanned"]
+            np.testing.assert_array_equal(z1, r2.outputs["z"])
+        finally:
+            sched.close()
+
+
+class TestPlanCacheHitRate:
+    def test_repeated_identical_single_node_hit_rate(self):
+        """Satellite regression: 8 identical single-node submissions
+        must hit the per-node plan cache at least 7 times (the seed
+        pipeline showed 7/8 *misses* from per-request key churn)."""
+        sched = make_scheduler(ThreadedExecutor(policy=POLICY))
+        try:
+            arrays = saxpy_arrays(1024)
+            for _ in range(8):
+                sched.submit(single_node_graph(), arrays).result(30)
+            pc = sched.plan_cache
+            assert pc.misses == 1
+            assert pc.hits >= 7
+            assert pc.hit_rate >= 7 / 8
+        finally:
+            sched.close()
